@@ -1,0 +1,92 @@
+"""Paper Fig. 12 — heterogeneous edge environment (Env. B) comparison.
+
+PAC+ vs its heterogeneity-oblivious predecessor (PAC) vs cost models of
+Asteroid (HPP + full-parameter FT) and HetPipe (inter-group DP +
+intra-group PP + full FT, higher comm). 1-epoch and 3-epoch totals
+(epochs ≥2 use the activation cache in PAC+/PAC only).
+"""
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.configs import get_arch
+from repro.core.planner import (
+    HybridParallelismPlanner,
+    JETSON_NANO_H,
+    JETSON_NANO_L,
+    JETSON_TX2_H,
+    JETSON_TX2_L,
+    model_layer_costs,
+)
+
+ENV_B = [JETSON_NANO_H, JETSON_NANO_L, JETSON_TX2_H, JETSON_TX2_L]
+STEPS_PER_EPOCH = 50
+
+
+def _epoch_time(plan):
+    return plan.minibatch_latency * STEPS_PER_EPOCH
+
+
+def _hetpipe_like(costs, devs, mbs, M):
+    """HetPipe: straight PP inside virtual workers + async DP across them —
+    modelled as the PP plan plus 2× inter-stage comm (asymmetric links) and
+    full-model parameter sync."""
+    from repro.core.planner import plan_pure_pp
+
+    pp = plan_pure_pp(costs, devs, mbs, M)
+    if pp is None:
+        return None
+    sync = 2.0 * sum(c.param_bytes for c in costs) / min(d.bandwidth for d in devs)
+    return pp.minibatch_latency * 1.35 + sync / STEPS_PER_EPOCH
+
+
+def main(arch="bart-large-pac") -> list:
+    cfg = get_arch(arch)
+    out = []
+    rows = {}
+
+    pac_costs = model_layer_costs(cfg, "pac", seq_len=128)
+    cached_costs = model_layer_costs(cfg, "pac_cached", seq_len=128)
+    full_costs = model_layer_costs(cfg, "full", seq_len=128)
+
+    pacp = HybridParallelismPlanner(pac_costs, ENV_B, 8, 4).plan()
+    pac_homo = HybridParallelismPlanner(pac_costs, ENV_B, 8, 4, heterogeneity_aware=False).plan()
+    cachedp = HybridParallelismPlanner(cached_costs, ENV_B, 8, 4).plan()
+    asteroid = HybridParallelismPlanner(full_costs, ENV_B, 8, 4).plan()
+    hetpipe_mb = _hetpipe_like(full_costs, ENV_B, 8, 4)
+
+    e_pac = _epoch_time(pacp)
+    e_cached = _epoch_time(cachedp)
+    rows["pac+"] = (e_pac, e_pac + 2 * e_cached)
+    e_homo = _epoch_time(pac_homo)
+    rows["pac_homo"] = (e_homo, e_homo + 2 * _epoch_time(
+        HybridParallelismPlanner(cached_costs, ENV_B, 8, 4, heterogeneity_aware=False).plan()
+    ))
+    e_ast = _epoch_time(asteroid)
+    rows["asteroid"] = (e_ast, 3 * e_ast)
+    if hetpipe_mb is not None:
+        e_het = hetpipe_mb * STEPS_PER_EPOCH
+        rows["hetpipe"] = (e_het, 3 * e_het)
+
+    for name, (e1, e3) in rows.items():
+        out.append(row(
+            f"fig12_{name}", 0.0, f"epoch1_s={e1:.1f};epochs3_s={e3:.1f}",
+        ))
+    s1_ast = rows["asteroid"][0] / rows["pac+"][0]
+    s3_ast = rows["asteroid"][1] / rows["pac+"][1]
+    s1_het = rows.get("hetpipe", (np.nan,) * 2)[0] / rows["pac+"][0]
+    s3_het = rows.get("hetpipe", (np.nan,) * 2)[1] / rows["pac+"][1]
+    het_gain = 1 - rows["pac+"][0] / rows["pac_homo"][0]
+    out.append(row(
+        "fig12_claim", 0.0,
+        f"speedup_vs_asteroid_1ep={s1_ast:.1f}x_3ep={s3_ast:.1f}x;"
+        f"vs_hetpipe_1ep={s1_het:.1f}x_3ep={s3_het:.1f}x;"
+        f"het_aware_gain={het_gain:.1%};"
+        f"claim=2.9-9.7x (1ep), 6.9-14.7x (3ep), ≤35% het gain;"
+        f"holds={s3_ast > s1_ast and s1_ast > 1.0}",
+    ))
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Paper Fig. 14 — adapter weight-initialization strategies.
+
+Random-Gaussian vs zero vs structural-pruning vs distillation init:
+iterations to reach a target train loss. Claim: pruning/distillation
+reach the target in ~25–35% fewer iterations.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row
+from repro.configs import get_arch
+from repro.core import steps
+from repro.core.init_methods import distillation_init, pruning_init
+from repro.core.parallel_adapters import init_adapter
+from repro.data import SyntheticPersonalCorpus
+from repro.models import backbone as bb
+from repro.optim import adamw_init
+
+B, S, MAX_STEPS, SEEDS = 8, 32, 150, 3
+
+
+def _curve(bp, cfg, ap, train):
+    opt = adamw_init(ap)
+
+    @jax.jit
+    def step(p, o, b):
+        loss, p2, o2, _ = steps.pac_train_step(bp, p, o, b, cfg=cfg, r=4)
+        return loss, p2, o2
+
+    losses = []
+    for i in range(MAX_STEPS):
+        loss, ap, opt = step(ap, opt, train[i % len(train)])
+        losses.append(float(loss))
+    return losses
+
+
+def _smooth(losses, w=8):
+    c = np.convolve(losses, np.ones(w) / w, mode="valid")
+    return c
+
+
+def _steps_to(losses, target):
+    for i, l in enumerate(_smooth(losses)):
+        if l <= target:
+            return i + 1
+    return None
+
+
+def main(arch="internlm2-1.8b") -> list:
+    cfg = get_arch(arch).reduced()
+    corpus = SyntheticPersonalCorpus(cfg.vocab, S + 1, 64, seed=3)
+    train = [corpus.batch(np.arange(i * B, (i + 1) * B) % 64) for i in range(8)]
+    bp = bb.init_backbone(jax.random.PRNGKey(0), cfg)
+    out = []
+
+    # average smoothed curves over seeds — a single seed at this reduced
+    # scale is too noisy to rank init strategies (paper Fig. 14 is
+    # BART/T5-Large over ~600 iterations)
+    curves = {k: [] for k in ("gaussian", "zero", "pruning", "distill")}
+    for seed in range(SEEDS):
+        key = jax.random.PRNGKey(10 + seed)
+        inits = {
+            "gaussian": init_adapter(key, cfg, r=4),
+            "zero": jax.tree.map(jnp.zeros_like, init_adapter(key, cfg, r=4)),
+            "pruning": pruning_init(key, bp, cfg, r=4),
+            "distill": distillation_init(key, bp, cfg, train[:2], r=4, steps=10),
+        }
+        for k, v in inits.items():
+            curves[k].append(_curve(bp, cfg, v, train))
+    mean_curves = {k: np.mean(np.array(v), axis=0) for k, v in curves.items()}
+    # common target: the worst final smoothed loss among the non-zero
+    # inits — every contender can reach it, so steps-to-target is defined
+    finals = {k: _smooth(c)[-1] for k, c in mean_curves.items()}
+    target = max(v for k, v in finals.items() if k != "zero")
+    res = {}
+    for k, c in mean_curves.items():
+        n = _steps_to(c, target)
+        res[k] = n
+        out.append(row(
+            f"fig14_init_{k}", 0.0,
+            f"steps_to_target={n};final_loss={float(c[-1]):.4f}",
+        ))
+    big = MAX_STEPS * 10
+    ok = min(res["pruning"] or big, res["distill"] or big) < (res["gaussian"] or big)
+    out.append(row(
+        "fig14_claim", 0.0,
+        f"claim=pruning/distill converge faster than gaussian;"
+        f"gaussian={res['gaussian']};pruning={res['pruning']};"
+        f"distill={res['distill']};holds={ok}",
+    ))
+    return out
+
+
+if __name__ == "__main__":
+    main()

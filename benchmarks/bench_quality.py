@@ -1,0 +1,100 @@
+"""Paper Table VI — fine-tuned quality parity of Parallel Adapters.
+
+Synthetic-personal-corpus analogue: fine-tune the reduced backbone on a
+learnable sequence task with each technique for the same step budget and
+compare final eval losses. Claim: PAC+ within noise of full/LoRA/Adapters
+(paper: |Δ| ≤ 0.37 points).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row
+from repro.configs import get_arch
+from repro.core import steps
+from repro.core.init_methods import pruning_init
+from repro.core.parallel_adapters import init_adapter
+from repro.core.peft import init_houlsby, init_lora
+from repro.data import SyntheticPersonalCorpus
+from repro.models import backbone as bb
+from repro.optim import adamw_init
+
+STEPS = 60
+B, S = 8, 32
+
+
+def _eval_loss(logits_fn, batches):
+    losses = []
+    for b in batches:
+        lg = logits_fn(b)
+        losses.append(float(bb.cross_entropy(lg, b["labels"])))
+    return float(np.mean(losses))
+
+
+def main(arch="internlm2-1.8b", steps_budget=STEPS) -> list:
+    cfg = get_arch(arch).reduced()
+    corpus = SyntheticPersonalCorpus(cfg.vocab, S + 1, 64, seed=1)
+    # train on samples 0..47, evaluate on the held-out 48..63 — otherwise
+    # full FT memorizes the eval batch at this reduced scale and the
+    # "quality parity" comparison measures memorization capacity instead
+    train = [corpus.batch(np.arange(i * B, (i + 1) * B) % 48) for i in range(8)]
+    evalb = [corpus.batch(np.arange(48, 48 + B)), corpus.batch(np.arange(56, 56 + B))]
+    bp = bb.init_backbone(jax.random.PRNGKey(0), cfg)
+    out = []
+    results = {}
+
+    def run(name, params, step_fn, logits_fn, lr=3e-3):
+        opt = adamw_init(params)
+        jstep = jax.jit(step_fn)
+        p = params
+        for i in range(steps_budget):
+            loss, p, opt = jstep(p, opt, train[i % len(train)])
+        final = _eval_loss(lambda b: logits_fn(p, b), evalb)
+        results[name] = final
+        out.append(row(f"table6_quality_{name}", 0.0, f"eval_loss={final:.4f}"))
+        return p
+
+    # full
+    run("full", bp,
+        lambda p, o, b: steps.full_train_step(p, o, b, cfg=cfg, lr=1e-3)[:3],
+        lambda p, b: bb.backbone_logits(p, cfg, b))
+    # lora
+    lp = init_lora(jax.random.PRNGKey(1), cfg)
+    from repro.core import peft
+    run("lora", lp,
+        lambda p, o, b: steps.lora_train_step(bp, p, o, b, cfg=cfg)[:3],
+        lambda p, b: peft.lora_logits(bp, p, cfg, b))
+    # houlsby adapters
+    hp = init_houlsby(jax.random.PRNGKey(2), cfg)
+    run("adapters", hp,
+        lambda p, o, b: steps.houlsby_train_step(bp, p, o, b, cfg=cfg)[:3],
+        lambda p, b: peft.houlsby_logits(bp, p, cfg, b))
+    # PAC+ (pruning init, as deployed)
+    ap = pruning_init(jax.random.PRNGKey(3), bp, cfg, r=4)
+
+    def pac_step(p, o, b):
+        loss, p2, o2, _ = steps.pac_train_step(bp, p, o, b, cfg=cfg, r=4)
+        return loss, p2, o2
+
+    def pac_logits_fn(p, b):
+        x, pos = bb.embed_inputs(bp, cfg, b)
+        bf, taps = bb.backbone_forward(bp, cfg, b, collect_taps=True)
+        from repro.core.parallel_adapters import pac_logits
+        return pac_logits(bp, p, cfg, x, taps, bf, pos, r=4)
+
+    run("pac", ap, pac_step, pac_logits_fn)
+
+    base_mean = np.mean([results["full"], results["lora"], results["adapters"]])
+    diff = results["pac"] - base_mean
+    out.append(row(
+        "table6_claim", 0.0,
+        f"pac_minus_mean={diff:+.4f};claim=|Δ|small;holds={abs(diff) < 0.5}",
+    ))
+    return out
+
+
+if __name__ == "__main__":
+    main()

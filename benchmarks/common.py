@@ -1,0 +1,61 @@
+"""Shared helpers for the paper-table benchmarks.
+
+Benchmarks run REDUCED-scale models on CPU (1 device): wall-times are
+indicative ratios (the paper's Jetson absolute numbers are reproduced by
+the planner's analytic device profiles), FLOPs/memory come from the same
+trip-count-aware HLO cost model the roofline uses.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_cost import analyze_hlo
+
+
+def timeit(fn: Callable, *args, iters: int = 3, warmup: int = 1) -> float:
+    """Median wall-time per call (seconds), after jit warmup."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def hlo_cost_of(fn: Callable, *args):
+    """(flops, bytes) from the compiled module of fn(*args)."""
+    compiled = jax.jit(fn).lower(*args).compile()
+    c = analyze_hlo(compiled.as_text())
+    return c.flops, c.bytes
+
+
+def mem_stats_of(fn: Callable, *args):
+    compiled = jax.jit(fn).lower(*args).compile()
+    return compiled.memory_analysis()
+
+
+def row(name: str, us_per_call: float, derived: str) -> str:
+    line = f"{name},{us_per_call:.1f},{derived}"
+    print(line)
+    return line
+
+
+def make_batch(cfg, B, S, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    batch = {}
+    if cfg.frontend is not None:
+        batch["embeds"] = jax.random.normal(ks[0], (B, S, cfg.d_model)) * 0.3
+    else:
+        batch["tokens"] = jax.random.randint(ks[0], (B, S), 0, cfg.vocab)
+    batch["labels"] = jax.random.randint(ks[1], (B, S), 0, cfg.vocab)
+    return batch

@@ -1,0 +1,53 @@
+"""Aggregate results/dryrun/*.json into the §Roofline markdown table."""
+
+import glob
+import json
+import os
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(results_dir="results/dryrun"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def table(recs, mesh="16x16") -> str:
+    rows = [r for r in recs if r["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"]) if r["shape"] in SHAPE_ORDER else 9))
+    out = [
+        f"### §Roofline-table (mesh {mesh}, per-chip terms, seconds)",
+        "",
+        "| arch | shape | tech | note | compute | memory | collective | bottleneck | useful % |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['technique']} | {r['note']} "
+            f"| {r['t_compute']:.4f} | {r['t_memory']:.4f} | {r['t_collective']:.4f} "
+            f"| **{r['bottleneck']}** | {100*r['useful_compute_ratio']:.1f} |"
+        )
+    return "\n".join(out)
+
+
+def main() -> None:
+    import sys
+
+    recs = load(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun")
+    if not recs:
+        print("roofline_table,0.0,no-dryrun-results-yet")
+        return
+    for mesh in ("16x16", "2x16x16"):
+        t = table(recs, mesh)
+        if t.count("\n") > 4:
+            print(t)
+            print()
+    n_ok = len(recs)
+    print(f"roofline_table,0.0,cases={n_ok}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Usage: ``PYTHONPATH=src python -m benchmarks.run [--only fig3,table1,...]``
+Each function prints ``name,us_per_call,derived`` CSV rows.
+"""
+
+import argparse
+import sys
+import time
+import traceback
+
+BENCHES = [
+    ("fig3_flops", "benchmarks.bench_flops"),
+    ("table1_memory", "benchmarks.bench_memory"),
+    ("fig13a_step_time", "benchmarks.bench_step_time"),
+    ("table6_quality", "benchmarks.bench_quality"),
+    ("table7_quant", "benchmarks.bench_quant"),
+    ("fig14_init", "benchmarks.bench_init"),
+    ("fig18_cache", "benchmarks.bench_cache"),
+    ("fig16_scalability", "benchmarks.bench_scalability"),
+    ("fig12_heterogeneous", "benchmarks.bench_heterogeneous"),
+    ("roofline", "benchmarks.roofline_table"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated bench name prefixes")
+    args = ap.parse_args()
+    only = args.only.split(",") if args.only else None
+
+    failures = []
+    print("name,us_per_call,derived")
+    for name, module in BENCHES:
+        if only and not any(name.startswith(o) for o in only):
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(module, fromlist=["main"])
+            mod.main()
+            print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+        except Exception as e:
+            failures.append((name, repr(e)))
+            print(f"{name}_FAILED,0.0,{e!r}")
+            traceback.print_exc()
+    if failures:
+        print(f"# {len(failures)} benchmark(s) failed", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

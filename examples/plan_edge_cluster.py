@@ -1,0 +1,42 @@
+"""Planner demo — paper Fig. 17: device grouping across models and pools.
+
+    PYTHONPATH=src python examples/plan_edge_cluster.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_arch
+from repro.core.pipeline import simulate_plan
+from repro.core.planner import (
+    HybridParallelismPlanner,
+    JETSON_NANO_H,
+    JETSON_NANO_L,
+    JETSON_TX2_H,
+    JETSON_TX2_L,
+    model_layer_costs,
+    plan_pure_dp,
+    plan_pure_pp,
+)
+
+POOLS = {
+    "Env.A (4x nano-H)": [JETSON_NANO_H] * 4,
+    "Env.B (het 4-dev)": [JETSON_NANO_H, JETSON_NANO_L, JETSON_TX2_H, JETSON_TX2_L],
+    "8x nano-H": [JETSON_NANO_H] * 8,
+}
+
+for arch in ("t5-base-pac", "bart-large-pac", "t5-large-pac"):
+    cfg = get_arch(arch)
+    costs = model_layer_costs(cfg, "pac", seq_len=128)
+    print(f"\n=== {arch} ({cfg.param_count()/1e9:.2f}B params), technique=PAC+ ===")
+    for pool_name, devs in POOLS.items():
+        plan = HybridParallelismPlanner(costs, devs, len(devs), 4).plan()
+        sim = simulate_plan(plan)
+        dp = plan_pure_dp(costs, devs, len(devs), 4)
+        pp = plan_pure_pp(costs, devs, len(devs), 4)
+        print(f"\n[{pool_name}] HP: {plan.minibatch_latency*1e3:.0f} ms/minibatch, "
+              f"bubble {sim['bubble_fraction']:.1%} | "
+              f"DP: {'OOM' if dp is None else f'{dp.minibatch_latency*1e3:.0f} ms'} | "
+              f"PP: {'OOM' if pp is None else f'{pp.minibatch_latency*1e3:.0f} ms'}")
+        print(plan.describe())

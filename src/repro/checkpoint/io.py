@@ -1,0 +1,83 @@
+"""Checkpointing: pytree <-> disk with msgpack framing.
+
+Handles plain arrays and :class:`~repro.core.quantization.QTensor` leaves
+(the quantized backbone checkpoints exactly at its storage bit-width —
+the on-disk artifact is as small as the in-memory footprint, which is the
+paper's deployment story for edge flash).
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+from repro.core.quantization import QTensor
+
+_SENTINEL_Q = "__qtensor__"
+_SENTINEL_A = "__array__"
+
+
+def _encode(tree: Any):
+    if isinstance(tree, QTensor):
+        return {
+            _SENTINEL_Q: True,
+            "q": _encode(np.asarray(tree.q)),
+            "scale": _encode(np.asarray(tree.scale)),
+            "bits": tree.bits,
+            "block": tree.block,
+            "orig_last": tree.orig_last,
+        }
+    if isinstance(tree, (jax.Array, np.ndarray)):
+        arr = np.asarray(tree)
+        return {
+            _SENTINEL_A: True,
+            "dtype": arr.dtype.str,
+            "shape": list(arr.shape),
+            "data": arr.tobytes(),
+        }
+    if isinstance(tree, dict):
+        return {k: _encode(v) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return {"__list__": [_encode(v) for v in tree], "__tuple__": isinstance(tree, tuple)}
+    if isinstance(tree, (int, float, str, bool)) or tree is None:
+        return {"__scalar__": tree}
+    raise TypeError(f"cannot checkpoint leaf of type {type(tree)}")
+
+
+def _decode(obj: Any):
+    if isinstance(obj, dict):
+        if obj.get(_SENTINEL_Q):
+            return QTensor(
+                _decode(obj["q"]), _decode(obj["scale"]), obj["bits"], obj["block"], obj["orig_last"]
+            )
+        if obj.get(_SENTINEL_A):
+            arr = np.frombuffer(obj["data"], dtype=np.dtype(obj["dtype"])).reshape(obj["shape"])
+            return jnp.asarray(arr)
+        if "__list__" in obj:
+            items = [_decode(v) for v in obj["__list__"]]
+            return tuple(items) if obj.get("__tuple__") else items
+        if "__scalar__" in obj:
+            return obj["__scalar__"]
+        return {k: _decode(v) for k, v in obj.items()}
+    return obj
+
+
+def save_checkpoint(path: str, tree: Any) -> int:
+    """Write atomically; returns bytes written."""
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    payload = msgpack.packb(_encode(tree), use_bin_type=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(payload)
+    os.replace(tmp, path)
+    return len(payload)
+
+
+def load_checkpoint(path: str) -> Any:
+    with open(path, "rb") as f:
+        return _decode(msgpack.unpackb(f.read(), raw=False, strict_map_key=False))

@@ -1,0 +1,116 @@
+"""Activation cache for Parallel Adapters (paper §IV-B, §V-B).
+
+Because the backbone is frozen, the taps ``b_0..b_L`` are invariant per
+input sequence. During epoch 1 the cache captures them; from epoch 2 on
+the backbone forward is skipped entirely and the adapter trains straight
+from the cache (pure data parallelism — paper Fig. 11).
+
+Storage cost is ``(n_periods + 1) · S · d`` values per sequence (paper's
+``s × h × l`` analysis). The manager enforces a byte budget and spills to
+disk (the paper reloads per micro-batch from embedded flash; here we
+mmap ``.npy`` shards so reloads are zero-copy reads).
+"""
+
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def cache_bytes_per_sequence(cfg, seq_len: int, dtype_bytes: int = 4) -> int:
+    """Paper §V-B storage analysis: s·h·(l+1) values per sequence."""
+    return (cfg.n_periods + 1) * seq_len * cfg.d_model * dtype_bytes
+
+
+@dataclass
+class ActivationCache:
+    """Keyed store of backbone taps.
+
+    Keys are sequence ids (ints). Values are (b0, taps) with shapes
+    (S, d) and (n_periods, S, d) — stored per-sequence so epochs can
+    re-batch/shuffle freely, exactly like the paper's redistribution step.
+    """
+
+    budget_bytes: int = 2 << 30
+    spill_dir: Optional[str] = None
+    dtype: np.dtype = np.float32
+    _ram: Dict[int, Tuple[np.ndarray, np.ndarray]] = field(default_factory=dict)
+    _disk: Dict[int, str] = field(default_factory=dict)
+    _ram_bytes: int = 0
+    hits: int = 0
+    misses: int = 0
+
+    def __contains__(self, key: int) -> bool:
+        return key in self._ram or key in self._disk
+
+    def __len__(self) -> int:
+        return len(self._ram) + len(self._disk)
+
+    @property
+    def nbytes(self) -> int:
+        return self._ram_bytes
+
+    def put(self, key: int, b0: np.ndarray, taps: np.ndarray) -> None:
+        b0 = np.asarray(b0, self.dtype)
+        taps = np.asarray(taps, self.dtype)
+        size = b0.nbytes + taps.nbytes
+        if self._ram_bytes + size > self.budget_bytes and self.spill_dir:
+            self._spill(key, b0, taps)
+            return
+        if self._ram_bytes + size > self.budget_bytes:
+            # evict oldest RAM entries to disk-less drop (paper clears cache
+            # post-training; mid-training eviction means a re-forward later)
+            while self._ram and self._ram_bytes + size > self.budget_bytes:
+                k, (a, b) = next(iter(self._ram.items()))
+                self._ram_bytes -= a.nbytes + b.nbytes
+                del self._ram[k]
+        self._ram[key] = (b0, taps)
+        self._ram_bytes += size
+
+    def _spill(self, key: int, b0: np.ndarray, taps: np.ndarray) -> None:
+        os.makedirs(self.spill_dir, exist_ok=True)
+        path = os.path.join(self.spill_dir, f"act_{key}.npz")
+        np.savez(path, b0=b0, taps=taps)
+        self._disk[key] = path
+
+    def get(self, key: int) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        if key in self._ram:
+            self.hits += 1
+            return self._ram[key]
+        if key in self._disk:
+            self.hits += 1
+            z = np.load(self._disk[key], mmap_mode="r")
+            return z["b0"], z["taps"]
+        self.misses += 1
+        return None
+
+    def put_batch(self, keys, b0: jax.Array, taps: jax.Array) -> None:
+        """b0: (B,S,d); taps: (n_p,B,S,d) — device arrays from epoch 1."""
+        b0 = np.asarray(b0)
+        taps = np.asarray(taps)
+        for i, k in enumerate(keys):
+            self.put(int(k), b0[i], taps[:, i])
+
+    def get_batch(self, keys) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        """Reassemble a training batch from cached sequences."""
+        items = [self.get(int(k)) for k in keys]
+        if any(it is None for it in items):
+            return None
+        b0 = np.stack([it[0] for it in items], axis=0)  # (B,S,d)
+        taps = np.stack([it[1] for it in items], axis=1)  # (n_p,B,S,d)
+        return b0, taps
+
+    def clear(self) -> None:
+        for path in self._disk.values():
+            try:
+                os.remove(path)
+            except OSError:
+                pass
+        self._ram.clear()
+        self._disk.clear()
+        self._ram_bytes = 0

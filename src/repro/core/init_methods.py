@@ -1,0 +1,246 @@
+"""Weight initialization for Parallel Adapters (paper §IV-C).
+
+Two initialisers beyond random Gaussian / zero:
+
+* **Structural pruning** — the adapter inherits the backbone's top-norm
+  channels (Torch-Pruning's norm criterion, re-implemented in JAX):
+  per-matrix row/col selection by L2 importance, with W_down initialised
+  to the channel-selection matrix so the side network starts as a pruned
+  functional copy of the backbone.
+* **Knowledge distillation** — the side network is trained (on public
+  calibration data; no private user data, so the paper runs this in the
+  cloud) to reproduce the frozen backbone's next-token distribution from
+  its taps.
+
+Both keep ``W_up`` zero so the PAC+ model's initial output equals the
+pre-trained backbone exactly — the smooth-start property the paper
+derives from LoRA's B=0 init.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.parallel_adapters import adapter_config, init_adapter
+from repro.core.quantization import QTensor, maybe_dequantize_tree
+
+
+# ---------------------------------------------------------------------------
+# Norm-based structural pruning
+# ---------------------------------------------------------------------------
+
+
+def _l2(w, axis):
+    return jnp.sqrt(jnp.sum(jnp.square(w), axis=axis))
+
+
+def _topk_idx(importance: jax.Array, k: int) -> jax.Array:
+    """Indices of the top-k channels, sorted ascending (stable layout)."""
+    k = min(k, importance.shape[0])
+    idx = jnp.argsort(-importance)[:k]
+    return jnp.sort(idx)
+
+
+def _dense(x):
+    return maybe_dequantize_tree(x)
+
+
+def channel_importance(backbone_params, cfg) -> jax.Array:
+    """L2 importance of each d_model channel (norm criterion)."""
+    emb = _dense(backbone_params["embed"])
+    imp = _l2(emb, axis=0)
+    for pos in backbone_params["blocks"]:
+        mixer = pos["mixer"]
+        for name in ("wq", "wz", "in_proj"):
+            if name in mixer:
+                w = _dense(mixer[name])  # (n_p, d, out)
+                imp = imp + _l2(w, axis=(0, 2))
+                break
+    return imp
+
+
+def _prune_rows_cols(w, row_idx=None, col_idx=None):
+    w = _dense(w)
+    if row_idx is not None:
+        w = jnp.take(w, row_idx, axis=-2)
+    if col_idx is not None:
+        w = jnp.take(w, col_idx, axis=-1)
+    return w
+
+
+def _prune_heads(w, keep_d, n_heads, hd, n_heads_a, hd_a, transpose=False):
+    """(n_p, d, H*hd) -> (n_p, d_a, H_a*hd_a) by head/width norm selection."""
+    w = _dense(w)
+    if transpose:
+        w = jnp.swapaxes(w, -1, -2)  # (n_p, d, H*hd)
+    n_p, d, _ = w.shape
+    w = w.reshape(n_p, d, n_heads, hd)
+    head_imp = _l2(w, axis=(0, 1, 3))
+    heads = _topk_idx(head_imp, min(n_heads_a, n_heads))
+    w = jnp.take(w, heads, axis=2)
+    if n_heads_a > n_heads:  # adapter wider than source: zero-pad heads
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, n_heads_a - n_heads), (0, 0)))
+    dim_imp = _l2(w, axis=(0, 1, 2))
+    dims = _topk_idx(dim_imp, min(hd_a, hd))
+    w = jnp.take(w, dims, axis=3)
+    if hd_a > hd:  # adapter head_dim wider than source: zero-pad (smooth start)
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, 0), (0, hd_a - hd)))
+    w = jnp.take(w, keep_d, axis=1).reshape(n_p, keep_d.shape[0], n_heads_a * hd_a)
+    if transpose:
+        w = jnp.swapaxes(w, -1, -2)
+    return w
+
+
+def pruning_init(rng, backbone_params, cfg, r: int = 8, dtype=jnp.float32) -> dict:
+    """Adapter params initialised from the backbone's top-norm channels."""
+    acfg = adapter_config(cfg, r)
+    params = init_adapter(rng, cfg, r, dtype)  # layout template
+    d_a = acfg.d_model
+    imp = channel_importance(backbone_params, cfg)
+    keep_d = _topk_idx(imp, d_a)
+
+    # W_down := channel-selection matrices (b_i -> its top-norm channels)
+    sel = jnp.zeros((cfg.d_model, d_a), dtype).at[keep_d, jnp.arange(d_a)].set(1.0)
+    params["downs"] = jnp.broadcast_to(sel, params["downs"].shape)
+    params["up"] = jnp.zeros_like(params["up"])  # smooth start (§IV-C)
+
+    for pos_i, spec in enumerate(cfg.pattern):
+        src, dst = backbone_params["blocks"][pos_i], params["blocks"][pos_i]
+        dst["ln1"] = jnp.take(_dense(src["ln1"]), keep_d, axis=-1)
+        if "ln2" in dst and "ln2" in src:
+            dst["ln2"] = jnp.take(_dense(src["ln2"]), keep_d, axis=-1)
+        sm, dm = src["mixer"], dst["mixer"]
+        if spec.kind == "attn" or spec.kind == "mlstm":
+            H, hd = cfg.n_heads, cfg.hd
+            Ha, hda = acfg.n_heads, acfg.hd
+            for nm in ("wq", "wk", "wv"):
+                n_src = cfg.n_kv_heads if (spec.kind == "attn" and nm in ("wk", "wv")) else H
+                n_dst = acfg.n_kv_heads if (spec.kind == "attn" and nm in ("wk", "wv")) else Ha
+                dm[nm] = _prune_heads(sm[nm], keep_d, n_src, hd, n_dst, hda)
+            dm["wo"] = _prune_heads(sm["wo"], keep_d, H, hd, Ha, hda, transpose=True)
+            if spec.kind == "mlstm":
+                dm["ogate"] = _prune_heads(sm["ogate"], keep_d, H, hd, Ha, hda)
+                gate_heads = _topk_idx(
+                    _l2(_dense(sm["wi"]), axis=(0, 1)), Ha
+                )
+                dm["wi"] = _prune_rows_cols(sm["wi"], keep_d, gate_heads)
+                dm["wf"] = _prune_rows_cols(sm["wf"], keep_d, gate_heads)
+                dm["f_bias"] = jnp.take(_dense(sm["f_bias"]), gate_heads, axis=-1)
+        elif spec.kind == "slstm":
+            dd = acfg.d_model
+            for nm in ("wz", "wi", "wf", "wog", "wo"):
+                dm[nm] = _prune_rows_cols(sm[nm], keep_d, keep_d)
+            dm["f_bias"] = jnp.take(_dense(sm["f_bias"]), keep_d, axis=-1)
+            # block-diagonal recurrences: select matching head blocks
+            Ha = acfg.n_heads
+            hda = dd // Ha
+            for nm in ("rz", "ri", "rf"):
+                w = _dense(sm[nm])  # (n_p, H, hd, hd)
+                w = w[:, :Ha, :hda, :hda]
+                dm[nm] = w
+        elif spec.kind == "mamba":
+            di_imp = _l2(_dense(sm["in_proj"]), axis=(0, 1))
+            di_a = acfg.d_inner
+            keep_x = _topk_idx(di_imp[: cfg.d_inner], di_a)
+            keep_z = _topk_idx(di_imp[cfg.d_inner :], di_a) + cfg.d_inner
+            keep_xz = jnp.concatenate([keep_x, keep_z])
+            dm["in_proj"] = _prune_rows_cols(sm["in_proj"], keep_d, keep_xz)
+            dm["conv_w"] = jnp.take(_dense(sm["conv_w"]), keep_x, axis=-1)
+            dm["conv_b"] = jnp.take(_dense(sm["conv_b"]), keep_x, axis=-1)
+            ds = acfg.ssm_d_state
+            bc = _prune_rows_cols(sm["w_bc"], keep_x)
+            dm["w_bc"] = jnp.concatenate(
+                [bc[..., :ds], bc[..., cfg.ssm_d_state : cfg.ssm_d_state + ds]], axis=-1
+            )
+            rk = dm["w_dt1"].shape[-1]
+            dm["w_dt1"] = _prune_rows_cols(sm["w_dt1"], keep_x)[..., :rk]
+            dm["w_dt2"] = _prune_rows_cols(sm["w_dt2"], None, keep_x)[..., :rk, :]
+            dm["dt_bias"] = jnp.take(_dense(sm["dt_bias"]), keep_x, axis=-1)
+            dm["a_log"] = jnp.take(_dense(sm["a_log"]), keep_x, axis=-2)[..., :ds]
+            dm["d_skip"] = jnp.take(_dense(sm["d_skip"]), keep_x, axis=-1)
+            dm["out_proj"] = _prune_rows_cols(sm["out_proj"], keep_x, keep_d)
+        # FFN
+        if "ffn" in dst:
+            if spec.moe and cfg.moe is not None:
+                # average the experts, then prune — the adapter's dense FFN
+                # inherits the expert ensemble's dominant channels
+                wi = jnp.mean(_dense(src["ffn"]["wi"]), axis=1)  # (n_p, d, de)
+                wg = jnp.mean(_dense(src["ffn"]["wg"]), axis=1)
+                wo = jnp.mean(_dense(src["ffn"]["wo"]), axis=1)
+            else:
+                wi, wg, wo = (_dense(src["ffn"][n]) for n in ("wi", "wg", "wo"))
+            ff_imp = _l2(wi, axis=(0, 1))
+            keep_ff = _topk_idx(ff_imp, dst["ffn"]["wi"].shape[-1])
+            dst["ffn"]["wi"] = _prune_rows_cols(wi, keep_d, keep_ff)
+            dst["ffn"]["wg"] = _prune_rows_cols(wg, keep_d, keep_ff)
+            dst["ffn"]["wo"] = _prune_rows_cols(wo, keep_ff, keep_d)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Knowledge-distillation init
+# ---------------------------------------------------------------------------
+
+
+def distillation_init(
+    rng,
+    backbone_params,
+    cfg,
+    calib_batches,
+    r: int = 8,
+    steps: int = 50,
+    lr: float = 1e-3,
+    from_pruning: bool = True,
+) -> dict:
+    """Train the side network to mimic the frozen backbone's predictions.
+
+    calib_batches: iterable of {"tokens": (B,S)} public-data batches.
+    The student's logits come from the adapter path *alone*
+    (`lm_head(W_up a_L)` vs teacher `lm_head(b_final)`), so after
+    distillation the side network is a functional mini-replica — the
+    paper's "smaller student model" (Hsieh et al. toolkit analogue).
+    """
+    from repro.core.parallel_adapters import adapter_forward
+    from repro.models.backbone import backbone_forward, embed_inputs, logits_from_hidden
+    from repro.optim import adamw_init, adamw_update
+
+    if from_pruning:
+        adapter = pruning_init(rng, backbone_params, cfg, r)
+    else:
+        adapter = init_adapter(rng, cfg, r)
+    # distillation needs a non-zero output path; break the W_up symmetry
+    k_up = jax.random.fold_in(rng, 17)
+    adapter["up"] = (
+        jax.random.normal(k_up, adapter["up"].shape) * adapter["up"].shape[0] ** -0.5
+    ).astype(adapter["up"].dtype)
+
+    def kl_loss(aparams, batch):
+        x, positions = embed_inputs(backbone_params, cfg, batch)
+        b_final, taps = backbone_forward(backbone_params, cfg, batch, collect_taps=True)
+        b_final, taps, x = jax.lax.stop_gradient((b_final, taps, x))
+        side = adapter_forward(aparams, cfg, x, taps, positions, r)
+        s_logits = logits_from_hidden(backbone_params, cfg, side)
+        t_logits = logits_from_hidden(backbone_params, cfg, b_final)
+        t = jax.nn.softmax(t_logits.astype(jnp.float32), axis=-1)
+        ls = jax.nn.log_softmax(s_logits.astype(jnp.float32), axis=-1)
+        return -jnp.mean(jnp.sum(t * ls, axis=-1))
+
+    opt = adamw_init(adapter)
+    step_fn = jax.jit(
+        lambda ap, op, b, i: _distill_step(kl_loss, ap, op, b, i, lr)
+    )
+    batches = list(calib_batches)
+    for i in range(steps):
+        adapter, opt = step_fn(adapter, opt, batches[i % len(batches)], jnp.int32(i))
+    return adapter
+
+
+def _distill_step(loss_fn, aparams, opt, batch, i, lr):
+    from repro.optim import adamw_update
+
+    grads = jax.grad(loss_fn)(aparams, batch)
+    return adamw_update(aparams, grads, opt, lr=lr)

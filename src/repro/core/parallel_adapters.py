@@ -1,0 +1,204 @@
+"""Parallel Adapters — the paper's core fine-tuning technique (§IV-A).
+
+A lightweight *side network* (hidden width ``d/r``, r=8 by default) runs
+in parallel with the frozen backbone. Adapter block *i* consumes
+
+    input_i = λ_i · W_down_i(b_i)  +  (1 − λ_i) · a_{i−1}
+
+where ``b_i`` is the backbone's post-period-i activation (a "tap") and
+``a_{i−1}`` the previous adapter output; λ_i is learnable, initialised to
+0.5 (paper Fig. 6). The final adapter state is projected back up with
+``W_up`` and summed with the backbone's final hidden state (side-tuning),
+then fed through the *frozen* LM head.
+
+Because no trainable parameter lives inside the backbone, the backward
+pass never touches it: gradients flow only through the ~(1/r²)-sized side
+network. Combined with the activation cache
+(`repro.core.activation_cache`) the backbone forward is also skipped from
+epoch 2 on.
+
+The side network mirrors the backbone *family* (attention blocks for
+transformers, mLSTM blocks for xLSTM, Mamba blocks for Jamba …) at the
+reduced width — the paper's "lightweight version of the backbone" — with
+two deliberate deviations recorded in DESIGN.md §Arch-applicability:
+MoE layers become dense FFNs, and taps are taken at pattern-period
+granularity (== per layer for un-patterned archs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.backbone import apply_block, init_block, logits_from_hidden
+from repro.models.layers import rms_norm
+
+
+# ---------------------------------------------------------------------------
+# Adapter (side-network) config derivation
+# ---------------------------------------------------------------------------
+
+
+def adapter_config(cfg, r: int = 8):
+    """The paper's 'lightweight version of the backbone': every width /r."""
+    d_a = max(8, cfg.d_model // r)
+    n_heads = max(1, cfg.n_heads // r)
+    # keep the GQA grouping ratio where possible
+    ratio = max(1, cfg.n_heads // cfg.n_kv_heads)
+    n_kv = max(1, n_heads // ratio)
+    n_heads = max(n_heads, n_kv)
+    hd = max(4, (d_a // n_heads) // 2 * 2)  # RoPE needs an even head_dim
+    d_a = hd * n_heads  # keep divisible
+    # MoE layers in the backbone become dense FFNs in the adapter
+    pattern = tuple(dataclasses.replace(s, moe=False) for s in cfg.pattern)
+    d_ff = cfg.d_ff
+    if any(s.moe for s in cfg.pattern) and cfg.moe is not None:
+        d_ff = cfg.moe.d_expert * cfg.moe.top_k
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + f"-adapter-r{r}",
+        d_model=d_a,
+        n_heads=n_heads,
+        n_kv_heads=n_kv,
+        head_dim=hd,
+        d_ff=max(16, d_ff // r) if d_ff else 0,
+        pattern=pattern,
+        moe=None,
+        mlstm_chunk=cfg.mlstm_chunk,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_adapter(rng, cfg, r: int = 8, dtype=jnp.float32) -> dict:
+    """Random (Gaussian) init. See `repro.core.init_methods` for the
+    pruning/distillation initialisers the paper recommends."""
+    acfg = adapter_config(cfg, r)
+    n_p = cfg.n_periods
+    d, d_a = cfg.d_model, acfg.d_model
+    k_down, k_blocks, k_up = jax.random.split(rng, 3)
+
+    blocks = []
+    for i, spec in enumerate(acfg.pattern):
+        rngs = jax.random.split(jax.random.fold_in(k_blocks, i), n_p)
+        blocks.append(jax.vmap(lambda rr, s=spec: init_block(rr, acfg, s, dtype))(rngs))
+
+    downs = (
+        jax.random.normal(k_down, (n_p + 1, d, d_a)) * d ** -0.5
+    ).astype(dtype)
+    return {
+        "downs": downs,  # [0] embeds b_0; [1..n_p] per-period taps
+        "lambda": jnp.full((n_p,), 0.5, jnp.float32),
+        "blocks": blocks,
+        "up": (jax.random.normal(k_up, (d_a, d)) * d_a ** -0.5).astype(dtype),
+        "out_norm": jnp.zeros((d_a,), dtype),
+    }
+
+
+def abstract_adapter(cfg, r: int = 8, dtype=jnp.float32):
+    return jax.eval_shape(lambda: init_adapter(jax.random.PRNGKey(0), cfg, r, dtype))
+
+
+def adapter_param_count(cfg, r: int = 8) -> int:
+    params = abstract_adapter(cfg, r)
+    return sum(int(jnp.prod(jnp.array(l.shape))) for l in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def adapter_forward(
+    adapter_params: dict,
+    cfg,
+    b0: jax.Array,
+    taps: jax.Array,
+    positions: jax.Array,
+    r: int = 8,
+) -> jax.Array:
+    """Run the side network.
+
+    b0:   (B, S, d)       backbone embedding output
+    taps: (n_p, B, S, d)  backbone activations after each period
+    Returns the final adapter hidden state upsampled to d: (B, S, d).
+    """
+    acfg = adapter_config(cfg, r)
+    downs = adapter_params["downs"]
+    lam = jax.nn.sigmoid  # noqa: E731 — documented below
+    # λ is stored unconstrained in [0,1] at init (0.5); clamp softly.
+    lambdas = jnp.clip(adapter_params["lambda"], 0.0, 1.0)
+
+    a = b0 @ downs[0]  # (B, S, d_a)
+
+    def period_fn(carry, xs):
+        a_prev = carry
+        block_slice, down_i, lam_i, b_i = xs
+        # cast back to the stream dtype: λ is f32, which would upcast a
+        # bf16 carry and break the scan's carry-type invariant
+        mixed = lam_i * (b_i @ down_i) + (1.0 - lam_i) * a_prev
+        h = mixed.astype(a_prev.dtype)
+        for j, spec in enumerate(acfg.pattern):
+            h = apply_block(block_slice[j], h, acfg, spec, positions)
+        return h, None
+
+    a, _ = jax.lax.scan(
+        period_fn,
+        a,
+        (tuple(adapter_params["blocks"]), downs[1:], lambdas, taps),
+    )
+    a = rms_norm(a, adapter_params["out_norm"], acfg.norm_eps)
+    return a @ adapter_params["up"]
+
+
+def pac_logits(backbone_params, adapter_params, cfg, b0, taps, b_final, positions, r: int = 8):
+    """Side-tuning combine: adapter output + backbone final hidden → frozen head."""
+    side = adapter_forward(adapter_params, cfg, b0, taps, positions, r)
+    return logits_from_hidden(backbone_params, cfg, b_final + side)
+
+
+# ---------------------------------------------------------------------------
+# Decode-time adapter (serving a fine-tuned model)
+# ---------------------------------------------------------------------------
+
+
+def init_adapter_cache(cfg, B: int, max_len: int, r: int = 8, dtype=jnp.float32):
+    from repro.models.backbone import init_cache
+
+    return init_cache(adapter_config(cfg, r), B, max_len, dtype)
+
+
+def adapter_decode(
+    adapter_params, cfg, b0_t, taps_t, cache, pos, r: int = 8
+):
+    """One-token adapter step. b0_t: (B,1,d); taps_t: (n_p,B,1,d)."""
+    from repro.models.backbone import apply_block_decode
+
+    acfg = adapter_config(cfg, r)
+    downs = adapter_params["downs"]
+    lambdas = jnp.clip(adapter_params["lambda"], 0.0, 1.0)
+    a = b0_t @ downs[0]
+
+    def period_fn(carry, xs):
+        a_prev = carry
+        block_slice, cache_slice, down_i, lam_i, b_i = xs
+        h = lam_i * (b_i @ down_i) + (1.0 - lam_i) * a_prev
+        new_caches = []
+        for j, spec in enumerate(acfg.pattern):
+            h, nc = apply_block_decode(block_slice[j], h, acfg, spec, cache_slice[j], pos)
+            new_caches.append(nc)
+        return h, tuple(new_caches)
+
+    a, new_cache = jax.lax.scan(
+        period_fn,
+        a,
+        (tuple(adapter_params["blocks"]), tuple(cache), downs[1:], lambdas, taps_t),
+    )
+    a = rms_norm(a, adapter_params["out_norm"], acfg.norm_eps)
+    return a @ adapter_params["up"], list(new_cache)

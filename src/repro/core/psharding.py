@@ -1,0 +1,278 @@
+"""Parameter sharding rules (logical axes) + in-graph sharding constraints.
+
+Kept dependency-free (core) so both the launch layer (building
+in/out_shardings) and the model code (in-scan-body constraints) share one
+rule table.
+
+``gather_for_compute`` is §Perf iteration 2: with FSDP weights (d_model
+sharded over ``data``), GSPMD may lower ``x @ W`` as a partial dot +
+all-reduce of the *activations* over the data axis — for train_4k that
+moved 115 GB/device/step (measured, EXPERIMENTS.md). Constraining the
+per-layer weight slice to be replicated over ``data`` (sharded only over
+``model``) inside the scan body forces the classic FSDP all-gather of
+the *weights* instead (~0.3 GB/layer), a ~16× collective reduction.
+Decode keeps weights sharded (weights-stationary: at batch·1 tokens the
+activation all-reduce is the cheap side).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+from jax.tree_util import DictKey, SequenceKey
+
+FSDP = "fsdp"
+TP = "tp"
+# Fallback tensor-parallel axis: gets `model` only if every TP dim in the
+# same leaf failed its divisibility guard (grok: 8 experts on a 16-way
+# model axis -> shard d_ff inside the experts instead of replicating
+# the whole expert compute 16x).
+TP_ALT = "tp_alt"
+
+
+def path_names(path) -> list:
+    out = []
+    for k in path:
+        if isinstance(k, DictKey):
+            out.append(str(k.key))
+        elif isinstance(k, SequenceKey):
+            out.append(f"[{k.idx}]")
+        else:
+            out.append(str(k))
+    return out
+
+
+def logical_for_param(names: list, ndim: int) -> Tuple[Optional[str], ...]:
+    """Logical axes per dim for a parameter leaf at `names` path."""
+    name = names[-1]
+    parent = next((n for n in reversed(names[:-1]) if not n.startswith("[")), "")
+    none = (None,) * ndim
+
+    if name == "embed":
+        return (TP, FSDP)
+    if name == "lm_head":
+        return (FSDP, TP)
+    if name == "up" and ndim == 2:  # adapter up-projection (d_a, d)
+        return (TP, FSDP)
+    if name == "downs":  # (n_p+1, d, d_a)
+        return (None, FSDP, TP)
+    if name == "router":
+        return (None, FSDP, None)[:ndim] if ndim >= 2 else none
+    if parent == "ffn":
+        if ndim == 4:  # MoE experts (n_p, E, d, f) / (n_p, E, f, d)
+            if name in ("wi", "wg"):
+                return (None, TP, FSDP, TP_ALT)
+            if name == "wo":
+                return (None, TP, TP_ALT, FSDP)
+        if ndim == 3:
+            if name in ("wi", "wg"):
+                return (None, FSDP, TP)
+            if name == "wo":
+                return (None, TP, FSDP)
+        return none
+    if parent in ("mixer", ""):
+        table = {
+            "wq": (None, FSDP, TP),
+            "wk": (None, FSDP, TP),
+            "wv": (None, FSDP, TP),
+            "ogate": (None, FSDP, TP),
+            "wz": (None, FSDP, TP),
+            "wog": (None, FSDP, TP),
+            "wi": (None, FSDP, TP),
+            "wf": (None, FSDP, TP),
+            "wo": (None, TP, FSDP),
+            "in_proj": (None, FSDP, TP),
+            "out_proj": (None, TP, FSDP),
+            "conv_w": (None, None, TP),
+            "conv_b": (None, TP),
+            "w_bc": (None, TP, None),
+            "w_dt1": (None, TP, None),
+            "w_dt2": (None, None, TP),
+            "dt_bias": (None, TP),
+            "d_skip": (None, TP),
+            "a_log": (None, TP, None),
+        }
+        spec = table.get(name)
+        if spec is not None and len(spec) == ndim:
+            return spec
+    if name in ("a_q", "a_v"):
+        return (None, FSDP, None)
+    if name in ("b_q", "b_v"):
+        return (None, None, TP)
+    if name == "down" and ndim == 3:
+        return (None, FSDP, TP)
+    if name == "up" and ndim == 3:
+        return (None, TP, FSDP)
+    return none
+
+
+def resolve(logical, shape, mesh) -> P:
+    """Logical → mesh axes with divisibility guards."""
+    from repro.launch.mesh import data_axes
+
+    dp = data_axes(mesh)
+    # first pass: did any TP dim take the model axis?
+    tp_taken = any(
+        ax == TP and "model" in mesh.axis_names and dim % mesh.shape["model"] == 0
+        for dim, ax in zip(shape, logical)
+    )
+    out = []
+    for dim, ax in zip(shape, logical):
+        if ax is None:
+            out.append(None)
+        elif ax == FSDP:
+            total = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+            if dp and dim % total == 0:
+                out.append(dp if len(dp) > 1 else dp[0])
+            elif "data" in mesh.axis_names and dim % mesh.shape["data"] == 0:
+                out.append("data")
+            else:
+                out.append(None)
+        elif ax == TP or (ax == TP_ALT and not tp_taken):
+            if "model" in mesh.axis_names and dim % mesh.shape["model"] == 0:
+                out.append("model")
+            else:
+                out.append(None)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def ambient_mesh():
+    """The mesh from the enclosing ``with mesh:`` / set_mesh context."""
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        if m is not None and not m.empty:
+            return m
+    except Exception:
+        pass
+    try:
+        from jax._src import mesh as mesh_lib
+
+        m = mesh_lib.thread_resources.env.physical_mesh
+        if m is not None and not m.empty:
+            return m
+    except Exception:
+        pass
+    return None
+
+
+def _mesh_has_model_axis() -> bool:
+    mesh = ambient_mesh()
+    return mesh is not None and "model" in mesh.axis_names
+
+
+def constrain_hidden(x, mesh=None):
+    """Pin a (B, S, d) residual-stream tensor between blocks.
+
+    §Perf iterations 3+4: unconstrained, GSPMD re-shards the hidden state
+    ~5×/layer (measured 292 GB-weighted collectives on
+    internlm2×train_4k). Iteration 3 pinned x replicated-over-model
+    (Megatron TP: one all-reduce per matmul chain) — collectives dropped
+    3.4× but the stacked taps then lived model-replicated inside the scan
+    (64 GB temp). Iteration 4 shards the *sequence* dim over `model`
+    between blocks (Megatron sequence parallelism): same collective
+    volume (all-gather S before the mixer, reduce-scatter after), but the
+    resident stream and taps are 16× smaller. No-op outside a
+    `model`-axis mesh or when dims don't divide.
+    """
+    if mesh is None:
+        mesh = ambient_mesh()
+        if mesh is None or "model" not in mesh.axis_names:
+            return x
+    dp = [a for a in ("pod", "data") if a in mesh.axis_names]
+    total = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    if not dp or x.shape[0] % total != 0:
+        return x
+    b_spec = tuple(dp) if len(dp) > 1 else dp[0]
+    seq_spec = None
+    if x.ndim >= 3 and x.shape[1] % mesh.shape["model"] == 0:
+        seq_spec = "model"
+    spec = P(b_spec, seq_spec, *([None] * (x.ndim - 2)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def n_data_shards(mesh=None) -> int:
+    """Total size of the batch-ish mesh axes (pod×data); 1 without a mesh."""
+    if mesh is None:
+        mesh = ambient_mesh()
+    if mesh is None:
+        return 1
+    dp = [a for a in ("pod", "data") if a in mesh.axis_names]
+    return int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+
+
+def constrain_spec(x, axes, mesh=None):
+    """with_sharding_constraint with logical axes + divisibility guards.
+
+    ``axes``: per-dim entries of None | "batch" (pod+data) | "model".
+    No-op outside a mesh with a `model` axis (CPU tests), and any dim that
+    does not divide its axis size falls back to None.
+    """
+    if mesh is None:
+        mesh = ambient_mesh()
+        if mesh is None or "model" not in mesh.axis_names:
+            return x
+    dp = [a for a in ("pod", "data") if a in mesh.axis_names]
+    out = []
+    for dim, ax in zip(x.shape, axes):
+        if ax == "batch":
+            total = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+            if dp and dim % total == 0:
+                out.append(tuple(dp) if len(dp) > 1 else dp[0])
+            else:
+                out.append(None)
+        elif ax == "model" and dim % mesh.shape["model"] == 0:
+            out.append("model")
+        else:
+            out.append(None)
+    if all(a is None for a in out):
+        # an all-None constraint is *explicit replication* — it forces an
+        # immediate all-reduce of any partial-sum producer (measured on
+        # grok, where E=8 fails the model-axis guard: the (G,E,C,d)
+        # combine input got AR'd pre-scatter at 4× the post-scatter size)
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*out))
+
+
+def gather_for_compute(block_params, mesh=None):
+    """Constrain a (single-layer) param slice to TP-only sharding.
+
+    Called inside the backbone scan body after dequantisation: the FSDP
+    dim becomes replicated → GSPMD must all-gather the weight slice once
+    per layer (classic FSDP), instead of all-reducing activations.
+    No-op outside a mesh with a `model` axis (CPU tests).
+    """
+    if mesh is None:
+        mesh = ambient_mesh()
+        if mesh is None or "model" not in mesh.axis_names:
+            return block_params
+
+    def constrain(path, leaf):
+        if not hasattr(leaf, "ndim"):
+            return leaf
+        names = path_names(path)
+        # QTensor children (q/scale) add a flatten-index tail to the path;
+        # strip it so the rule lookup sees the parameter name. Gathering
+        # the *quantized* payload (int8) instead of the dequantized f32
+        # quarters the FSDP all-gather traffic (§Perf kimi iter H).
+        while names and (names[-1].startswith("[") or not names[-1].isidentifier()):
+            names = names[:-1]
+        if not names:
+            return leaf
+        # Inside the scan body every leaf lost its leading (n_period) dim;
+        # the rule table is keyed to *stacked* shapes. Look up the stacked
+        # logical and drop the scan dim (§Perf-hillclimb kimi iter A: the
+        # ndim-of-slice lookup mis-bucketed MoE (E,d,f) slices into the
+        # dense-stacked rule, replicating experts over `model`).
+        logical = logical_for_param(names, leaf.ndim + 1)[1:]
+        if len(logical) != leaf.ndim:
+            logical = logical_for_param(names, leaf.ndim)
+        logical = tuple(ax if ax in (TP, TP_ALT) else None for ax in logical)
+        spec = resolve(logical, leaf.shape, mesh)
+        return jax.lax.with_sharding_constraint(leaf, spec)
+
+    return jax.tree_util.tree_map_with_path(constrain, block_params)

@@ -1,0 +1,185 @@
+"""Training / serving step functions.
+
+These are the units that get ``jax.jit``-ed with mesh shardings — one per
+fine-tuning technique (the paper's comparison set) plus the serving paths:
+
+* ``pac_train_step``          — PAC+ epoch-1: frozen (possibly quantized)
+                                 backbone forward + side-network update.
+* ``pac_cached_train_step``   — PAC+ epoch≥2: adapter-only, from cache.
+* ``full_train_step``         — full fine-tuning baseline.
+* ``lora_train_step``         — LoRA baseline (backprop through backbone).
+* ``houlsby_train_step``      — serial Adapters baseline.
+* ``prefill_step``            — forward over a full prompt (inference).
+* ``decode_step``             — one token against a KV/state cache.
+* ``pac_decode_step``         — decode through backbone + fine-tuned side
+                                 network (serving a personalised model).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import peft
+from repro.core.parallel_adapters import (
+    adapter_decode,
+    adapter_forward,
+    init_adapter_cache,
+    pac_logits,
+)
+from repro.models.backbone import (
+    backbone_decode,
+    backbone_forward,
+    backbone_logits,
+    cross_entropy,
+    embed_inputs,
+    logits_from_hidden,
+)
+from repro.optim import adamw_update, clip_by_global_norm
+
+# ---------------------------------------------------------------------------
+# PAC+ steps
+# ---------------------------------------------------------------------------
+
+
+def pac_loss_fn(adapter_params, backbone_params, cfg, batch, r: int = 8):
+    x, positions = embed_inputs(backbone_params, cfg, batch)
+    b_final, taps = backbone_forward(backbone_params, cfg, batch, collect_taps=True)
+    # the gradient "highway": nothing upstream of the taps is differentiated
+    x, b_final, taps = jax.lax.stop_gradient((x, b_final, taps))
+    logits = pac_logits(backbone_params, adapter_params, cfg, x, taps, b_final, positions, r)
+    return cross_entropy(logits, batch["labels"])
+
+
+def pac_train_step(
+    backbone_params, adapter_params, opt_state, batch, *, cfg, r: int = 8, lr=1e-3, clip=1.0
+):
+    """Epoch-1 PAC+ step. Returns (loss, adapter_params', opt_state', (b0, taps))."""
+    x, positions = embed_inputs(backbone_params, cfg, batch)
+    b_final, taps = backbone_forward(backbone_params, cfg, batch, collect_taps=True)
+    x, b_final, taps = jax.lax.stop_gradient((x, b_final, taps))
+
+    def loss_fn(ap):
+        logits = pac_logits(backbone_params, ap, cfg, x, taps, b_final, positions, r)
+        return cross_entropy(logits, batch["labels"])
+
+    loss, grads = jax.value_and_grad(loss_fn)(adapter_params)
+    grads, _ = clip_by_global_norm(grads, clip)
+    adapter_params, opt_state = adamw_update(adapter_params, grads, opt_state, lr=lr)
+    return loss, adapter_params, opt_state, (x, taps, b_final)
+
+
+def pac_cached_train_step(
+    backbone_params, adapter_params, opt_state, cached_batch, *, cfg, r: int = 8, lr=1e-3, clip=1.0
+):
+    """Epoch≥2 PAC+ step: backbone forward replaced by the activation cache.
+
+    cached_batch: {"b0": (B,S,d), "taps": (n_p,B,S,d), "b_final": (B,S,d),
+                   "labels": (B,S), optional "positions"}.
+    Only the LM head / final norm of ``backbone_params`` is read — the rest
+    of the backbone can be released from memory (paper §IV-B memory win).
+    """
+    b0, taps, b_final = cached_batch["b0"], cached_batch["taps"], cached_batch["b_final"]
+    B, S = b0.shape[:2]
+    if "positions" in cached_batch:
+        positions = cached_batch["positions"]
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        if cfg.rope == "mrope":
+            positions = jnp.broadcast_to(positions, (3, B, S))
+
+    def loss_fn(ap):
+        logits = pac_logits(backbone_params, ap, cfg, b0, taps, b_final, positions, r)
+        return cross_entropy(logits, cached_batch["labels"])
+
+    loss, grads = jax.value_and_grad(loss_fn)(adapter_params)
+    grads, _ = clip_by_global_norm(grads, clip)
+    adapter_params, opt_state = adamw_update(adapter_params, grads, opt_state, lr=lr)
+    return loss, adapter_params, opt_state
+
+
+# ---------------------------------------------------------------------------
+# Baseline fine-tuning steps
+# ---------------------------------------------------------------------------
+
+
+def full_train_step(params, opt_state, batch, *, cfg, lr=1e-4, clip=1.0):
+    def loss_fn(p):
+        return cross_entropy(backbone_logits(p, cfg, batch), batch["labels"])
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    grads, _ = clip_by_global_norm(grads, clip)
+    params, opt_state = adamw_update(params, grads, opt_state, lr=lr)
+    return loss, params, opt_state
+
+
+def lora_train_step(backbone_params, lora_params, opt_state, batch, *, cfg, lr=1e-3, clip=1.0):
+    def loss_fn(lp):
+        return cross_entropy(peft.lora_logits(backbone_params, lp, cfg, batch), batch["labels"])
+
+    loss, grads = jax.value_and_grad(loss_fn)(lora_params)
+    grads, _ = clip_by_global_norm(grads, clip)
+    lora_params, opt_state = adamw_update(lora_params, grads, opt_state, lr=lr)
+    return loss, lora_params, opt_state
+
+
+def houlsby_train_step(backbone_params, ad_params, opt_state, batch, *, cfg, lr=1e-3, clip=1.0):
+    def loss_fn(ap):
+        return cross_entropy(peft.houlsby_logits(backbone_params, ap, cfg, batch), batch["labels"])
+
+    loss, grads = jax.value_and_grad(loss_fn)(ad_params)
+    grads, _ = clip_by_global_norm(grads, clip)
+    ad_params, opt_state = adamw_update(ad_params, grads, opt_state, lr=lr)
+    return loss, ad_params, opt_state
+
+
+# ---------------------------------------------------------------------------
+# Serving steps
+# ---------------------------------------------------------------------------
+
+
+def prefill_step(params, batch, *, cfg):
+    """Full-prompt forward (inference-prefill). Returns last-position logits."""
+    logits = backbone_logits(params, cfg, batch)
+    return logits[:, -1:, :]
+
+
+def decode_step(params, token_batch, cache, pos, *, cfg):
+    """One-token decode against the cache. Returns (logits, cache')."""
+    return backbone_decode(params, cfg, token_batch, cache, pos)
+
+
+def pac_decode_step(
+    backbone_params, adapter_params, token_batch, cache, adapter_cache, pos, *, cfg, r: int = 8
+):
+    """Serve the personalised model: backbone decode + side-network decode."""
+    from repro.core.quantization import maybe_dequantize_tree
+    from repro.models.backbone import apply_block_decode
+    from repro.models.layers import rms_norm
+
+    if "embeds" in token_batch:
+        x = token_batch["embeds"]
+    else:
+        embed = maybe_dequantize_tree(backbone_params["embed"])
+        x = jnp.take(embed, token_batch["tokens"], axis=0)
+
+    def period_fn(carry, xs):
+        block_slice, cache_slice = xs
+        h = carry
+        new_caches = []
+        for i, spec in enumerate(cfg.pattern):
+            h, nc = apply_block_decode(block_slice[i], h, cfg, spec, cache_slice[i], pos)
+            new_caches.append(nc)
+        return h, (tuple(new_caches), h)
+
+    b_final, (new_cache, taps_t) = jax.lax.scan(
+        period_fn, x, (tuple(backbone_params["blocks"]), tuple(cache))
+    )
+    side, new_acache = adapter_decode(
+        adapter_params, cfg, x, taps_t, adapter_cache, pos, r
+    )
+    logits = logits_from_hidden(backbone_params, cfg, b_final + side)
+    return logits, list(new_cache), new_acache

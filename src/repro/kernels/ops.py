@@ -1,0 +1,70 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On TPU these call the real kernels; on CPU they run in ``interpret=True``
+mode (the kernel body executed step-by-step in Python/XLA — bit-accurate
+for validation, not for speed). ``use_kernels(False)`` routes everything
+to the jnp reference implementations instead (the default inside the big
+jnp model code, where XLA fusion is already adequate and kernels are an
+opt-in perf feature).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import QTensor
+from repro.kernels import ref
+from repro.kernels.adapter_fuse import adapter_fuse as _adapter_fuse_kernel
+from repro.kernels.flash_attention import flash_attention_tpu as _flash_kernel
+from repro.kernels.quant_matmul import quant_matmul as _quant_matmul_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def quant_matmul(x: jax.Array, w: QTensor, *, force_kernel: bool = False) -> jax.Array:
+    """x @ dequant(w) with fused in-VMEM dequantisation."""
+    if w.block != 128:
+        return x @ ref.quant_matmul_ref(jnp.eye(1), w.q, w.scale)  # pragma: no cover
+    if _on_tpu() or force_kernel:
+        return _quant_matmul_kernel(
+            x, w.q, w.scale, bits=w.bits, interpret=not _on_tpu()
+        )[..., : w.orig_last]
+    return ref.quant_matmul_ref(x, w.q, w.scale, w.bits)[..., : w.orig_last]
+
+
+def adapter_fuse(b, w_down, a, lam, *, force_kernel: bool = False):
+    """λ·(b@W_down) + (1−λ)·a, fused."""
+    T2 = b.shape[:-1]
+    b2 = b.reshape(-1, b.shape[-1])
+    a2 = a.reshape(-1, a.shape[-1])
+    if _on_tpu() or force_kernel:
+        out = _adapter_fuse_kernel(b2, w_down, a2, lam, interpret=not _on_tpu())
+    else:
+        out = ref.adapter_fuse_ref(b2, w_down, a2, lam)
+    return out.reshape(*T2, -1)
+
+
+def flash_attention(
+    q, k, v, *, causal=True, window: Optional[int] = None,
+    attn_softcap: Optional[float] = None, force_kernel: bool = False,
+):
+    """(B,H,S,hd) attention via the TPU kernel (or the jnp oracle on CPU)."""
+    B, H, S, hd = q.shape
+    q3 = q.reshape(B * H, S, hd)
+    k3 = k.reshape(B * H, -1, hd)
+    v3 = v.reshape(B * H, -1, hd)
+    if _on_tpu() or force_kernel:
+        out = _flash_kernel(
+            q3, k3, v3, causal=causal, window=window, attn_softcap=attn_softcap,
+            interpret=not _on_tpu(),
+        )
+    else:
+        out = ref.flash_attention_ref(
+            q3, k3, v3, causal=causal, window=window, attn_softcap=attn_softcap
+        )
+    return out.reshape(B, H, S, hd)

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose targets)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import QTensor, dequantize
+
+
+def quant_matmul_ref(x: jax.Array, q: jax.Array, scale: jax.Array, bits: int = 8) -> jax.Array:
+    """Dequantize-then-matmul (the paper's Fig. 8 two-step path)."""
+    orig_last = scale.shape[-1] * 128
+    t = QTensor(q, scale, bits, 128, orig_last)
+    return x @ dequantize(t, jnp.float32).astype(x.dtype)
+
+
+def adapter_fuse_ref(b: jax.Array, w_down: jax.Array, a: jax.Array, lam) -> jax.Array:
+    return (lam * (b @ w_down) + (1.0 - lam) * a).astype(b.dtype)
+
+
+def flash_attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    attn_softcap: Optional[float] = None,
+) -> jax.Array:
+    """Naive quadratic attention. q,k,v: (BH, S, hd)."""
+    BH, Sq, hd = q.shape
+    Sk = k.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * (hd ** -0.5)
+    if attn_softcap is not None:
+        s = attn_softcap * jnp.tanh(s / attn_softcap)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

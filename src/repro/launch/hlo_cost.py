@@ -1,0 +1,330 @@
+"""Trip-count-aware HLO cost model.
+
+XLA's built-in ``compiled.cost_analysis()`` counts a ``while`` body
+**once**, which silently hides ~n_layers× of the FLOPs/bytes for any
+scan-over-layers model (verified in tests). Since the whole framework
+leans on ``jax.lax.scan`` for compile-time sanity on 512-device meshes,
+the roofline needs its own cost model. This module parses the
+post-optimization (per-device, post-SPMD) HLO text and computes:
+
+* **flops** — ``dot``s (2·|result|·|contracted|), convolutions
+  (approximate), and 1 FLOP/element for elementwise fusion outputs;
+* **bytes** — operand+result bytes of top-level instructions at fusion
+  granularity (the XLA accounting), with two fidelity fixes: fusions that
+  only ``dynamic-slice`` a parameter are charged the slice (not the whole
+  buffer — critical for scans over stacked layer weights), and ``gather``
+  is charged 2×result (embedding lookups don't stream the whole table);
+* **collectives** — per-category bytes (output-shape based), with
+  all-reduce weighted 2× for its ring cost;
+
+…each multiplied by the enclosing ``while`` trip counts (read from
+``backend_config.known_trip_count``, falling back to the loop-condition
+constant).
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "s4": 1, "u2": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COMP_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(")
+_OPCODE_RE = re.compile(r"\s([a-z][a-z0-9\-]*)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_DSS_RE = re.compile(r"dynamic_slice_sizes=\{([0-9,]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute",
+)
+
+
+def _shapes_bytes(segment: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(segment):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _first_shape(segment: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.search(segment)
+    if not m:
+        return None
+    dtype, dims = m.groups()
+    return dtype, [int(d) for d in dims.split(",") if d]
+
+
+@dataclass
+class Instruction:
+    name: str
+    opcode: str
+    result_segment: str  # text between '=' and opcode
+    line: str
+
+    @property
+    def result_bytes(self) -> int:
+        return _shapes_bytes(self.result_segment)
+
+
+@dataclass
+class Computation:
+    name: str
+    instructions: List[Instruction] = field(default_factory=list)
+    symbols: Dict[str, str] = field(default_factory=dict)  # name -> result segment
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collectives: Dict[str, float] = field(default_factory=dict)
+    collective_count: int = 0
+
+    def __add__(self, o: "Cost") -> "Cost":
+        c = {k: self.collectives.get(k, 0) + o.collectives.get(k, 0)
+             for k in set(self.collectives) | set(o.collectives)}
+        return Cost(self.flops + o.flops, self.bytes + o.bytes, c,
+                    self.collective_count + o.collective_count)
+
+    def __mul__(self, k: float) -> "Cost":
+        return Cost(self.flops * k, self.bytes * k,
+                    {n: v * k for n, v in self.collectives.items()},
+                    int(self.collective_count * k))
+
+    @property
+    def collective_bytes(self) -> float:
+        """Ring-weighted total (all-reduce ×2)."""
+        return sum(v * (2.0 if k == "all-reduce" else 1.0) for k, v in self.collectives.items())
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if cur is None:
+            if stripped.endswith("{") and _COMP_HEADER_RE.match(stripped):
+                m = _COMP_HEADER_RE.match(stripped)
+                cur = Computation(m.group(2))
+            continue
+        if stripped == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        if not stripped.startswith("%") and not stripped.startswith("ROOT"):
+            continue
+        body = stripped[5:].strip() if stripped.startswith("ROOT") else stripped
+        if "=" not in body:
+            continue
+        lhs, rhs = body.split(" = ", 1)
+        name = lhs.strip().lstrip("%")
+        m = _OPCODE_RE.search(" " + rhs)
+        if not m:
+            continue
+        opcode = m.group(1)
+        result_segment = rhs[: m.start()]
+        cur.symbols[name] = result_segment
+        cur.instructions.append(Instruction(name, opcode, result_segment, body))
+    return comps
+
+
+_SKIP_BYTES = {
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast", "while",
+    "conditional", "call", "after-all", "add-dependency", "copy-start", "copy-done",
+    "partition-id", "replica-id", "iota",
+}
+
+
+def _dot_flops(inst: Instruction, comp: Computation) -> float:
+    result = _first_shape(inst.result_segment)
+    if result is None:
+        return 0.0
+    _, rdims = result
+    ops = _OPERAND_RE.findall(inst.line.split("(", 1)[1])
+    lhs_seg = comp.symbols.get(ops[0], "") if ops else ""
+    lhs = _first_shape(lhs_seg)
+    cm = _CONTRACT_RE.search(inst.line)
+    contracted = 1
+    if lhs and cm and cm.group(1):
+        for c in cm.group(1).split(","):
+            ci = int(c)
+            if ci < len(lhs[1]):
+                contracted *= lhs[1][ci]
+    return 2.0 * math.prod(rdims) * contracted if rdims else 2.0 * contracted
+
+
+def _fusion_operand_bytes(inst: Instruction, comp: Computation, comps) -> float:
+    """Operand bytes for a fusion: parameters that are only dynamic-sliced
+    are charged at slice size."""
+    called = None
+    m = _CALLS_RE.search(inst.line)
+    if m:
+        called = comps.get(m.group(1))
+    ops = _OPERAND_RE.findall(inst.line.split("(", 1)[1])
+    # map fusion parameter index -> "slice-only" bytes if applicable
+    slice_bytes: Dict[int, float] = {}
+    if called is not None:
+        param_names = {}
+        for ci in called.instructions:
+            pm = re.search(r"parameter\((\d+)\)", ci.line)
+            if ci.opcode == "parameter" and pm:
+                param_names[ci.name] = int(pm.group(1))
+        usage: Dict[int, List[str]] = {}
+        for ci in called.instructions:
+            if ci.opcode == "parameter":
+                continue
+            for ref in _OPERAND_RE.findall(ci.line.split("(", 1)[1] if "(" in ci.line else ""):
+                if ref in param_names:
+                    usage.setdefault(param_names[ref], []).append(ci.opcode)
+        for idx, users in usage.items():
+            if users and all(
+                u in ("dynamic-slice", "gather", "bitcast", "reshape") for u in users
+            ):
+                # charge the slice/gather result, not the whole buffer
+                for ci in called.instructions:
+                    if ci.opcode in ("dynamic-slice", "gather"):
+                        res = _first_shape(ci.result_segment)
+                        if res:
+                            dt, dims = res
+                            slice_bytes[idx] = math.prod(dims or [1]) * _DTYPE_BYTES.get(dt, 4)
+    total = 0.0
+    for i, op in enumerate(ops):
+        seg = comp.symbols.get(op)
+        if seg is None:
+            continue
+        if i in slice_bytes:
+            total += slice_bytes[i]
+        else:
+            total += _shapes_bytes(seg)
+    return total
+
+
+def _while_trip(inst: Instruction, comps) -> int:
+    m = _TRIP_RE.search(inst.line)
+    if m:
+        return int(m.group(1))
+    cm = _COND_RE.search(inst.line)
+    if cm and cm.group(1) in comps:
+        for ci in comps[cm.group(1)].instructions:
+            k = re.search(r"constant\((\d+)\)", ci.line)
+            if k:
+                return int(k.group(1))
+    return 1
+
+
+def _comp_cost(comp: Computation, comps, memo) -> Cost:
+    if comp.name in memo:
+        return memo[comp.name]
+    total = Cost()
+    for inst in comp.instructions:
+        op = inst.opcode
+        if op == "while":
+            bm = _BODY_RE.search(inst.line)
+            cnd = _COND_RE.search(inst.line)
+            trip = _while_trip(inst, comps)
+            if bm and bm.group(1) in comps:
+                total = total + _comp_cost(comps[bm.group(1)], comps, memo) * trip
+            if cnd and cnd.group(1) in comps:
+                total = total + _comp_cost(comps[cnd.group(1)], comps, memo) * trip
+            continue
+        if op in ("call", "conditional", "async-start"):
+            for cname in _CALLS_RE.findall(inst.line) + re.findall(
+                r"(?:branch_computations|to_apply)=\{?%?([\w.\-]+)", inst.line
+            ):
+                if cname in comps:
+                    total = total + _comp_cost(comps[cname], comps, memo)
+            continue
+        if op == "fusion":
+            m = _CALLS_RE.search(inst.line)
+            called = comps.get(m.group(1)) if m else None
+            fl = 0.0
+            if called is not None:
+                for ci in called.instructions:
+                    if ci.opcode in ("dot", "convolution"):
+                        fl += _dot_flops(ci, called)
+                    elif ci.opcode not in _SKIP_BYTES:
+                        res = _first_shape(ci.result_segment)
+                        if res:
+                            fl += math.prod(res[1] or [1])
+            total.flops += fl
+            # In-place dynamic-update-slice fusions (scan stacking, KV
+            # cache append): XLA aliases input/output buffers, so the
+            # real HBM traffic is the updated slice (read update + write
+            # region), not the whole accumulator. Without this, a
+            # chunked-scan backward is overcounted ~chunk× (measured 26 TB
+            # phantom bytes on jamba×train_4k).
+            if called is not None and called.instructions and (
+                called.instructions[-1].opcode == "dynamic-update-slice"
+            ):
+                ops_ = _OPERAND_RE.findall(inst.line.split("(", 1)[1])
+                small = sum(
+                    b for b in (
+                        _shapes_bytes(comp.symbols.get(o, "")) for o in ops_
+                    ) if b < inst.result_bytes
+                )
+                total.bytes += 2.0 * small
+                continue
+            total.bytes += inst.result_bytes + _fusion_operand_bytes(inst, comp, comps)
+            continue
+        if op in COLLECTIVE_OPS or any(op == c + "-start" for c in COLLECTIVE_OPS):
+            base = op.replace("-start", "")
+            b = float(inst.result_bytes)
+            total.collectives[base] = total.collectives.get(base, 0.0) + b
+            total.collective_count += 1
+            total.bytes += b
+            continue
+        if op in _SKIP_BYTES or op.endswith("-done"):
+            continue
+        if op in ("dot", "convolution"):
+            total.flops += _dot_flops(inst, comp)
+        elif op == "gather":
+            total.bytes += 2.0 * inst.result_bytes
+            continue
+        else:
+            res = _first_shape(inst.result_segment)
+            if res:
+                total.flops += math.prod(res[1] or [1])
+        # bytes: operands + result
+        opnds = _OPERAND_RE.findall(inst.line.split("(", 1)[1] if "(" in inst.line else "")
+        total.bytes += inst.result_bytes + sum(
+            _shapes_bytes(comp.symbols.get(o, "")) for o in opnds
+        )
+    memo[comp.name] = total
+    return total
+
+
+def analyze_hlo(text: str) -> Cost:
+    comps = parse_module(text)
+    entry = None
+    for raw in text.splitlines():
+        s = raw.strip()
+        if s.startswith("ENTRY"):
+            m = _COMP_HEADER_RE.match(s)
+            if m:
+                entry = m.group(2)
+            break
+    if entry is None or entry not in comps:
+        # fall back: last computation
+        entry = list(comps)[-1]
+    return _comp_cost(comps[entry], comps, {})

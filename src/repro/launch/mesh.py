@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+Target: TPU v5e — 16×16 = 256 chips per pod, 2 pods = 512 chips.
+Axes: ``data`` (batch + FSDP weight sharding), ``model`` (tensor/expert
+parallel), and ``pod`` (outer data parallelism across the inter-pod
+links) in the multi-pod configuration.
+
+Defined as functions, never module-level constants, so importing this
+module never touches jax device state (the dry-run entry point must set
+``XLA_FLAGS`` before *any* jax initialisation).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (tests/benchmarks on host devices)."""
+    return jax.make_mesh(tuple(shape), tuple(axes), axis_types=(AxisType.Auto,) * len(axes))
+
+
+def data_axes(mesh) -> tuple:
+    """Mesh axes that shard the batch (pod composes with data)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def model_axis(mesh) -> str:
+    return "model"
+
+
+# hardware constants for the roofline (TPU v5e)
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link

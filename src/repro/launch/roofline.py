@@ -1,0 +1,170 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+Per (arch × shape × mesh) cell we derive, from the *per-device* SPMD
+module (so every term is already per-chip — consistent with the
+assignment's "÷ chips" normalisation):
+
+    compute    = HLO_FLOPs(per-device)        / PEAK_FLOPS_BF16
+    memory     = HLO_bytes_accessed(per-dev)  / HBM_BW
+    collective = Σ collective op bytes        / ICI_BW
+
+``cost_analysis()`` provides FLOPs and bytes; collective bytes are parsed
+from the optimized HLO text (all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute), weighted by a ring-cost factor for
+all-reduce (2×). The dominant term is the bottleneck the §Perf loop
+iterates on; we also report MODEL_FLOPS = 6·N_active·D (train) or
+2·N_active·D (inference) and the useful-compute ratio.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Dict, Optional
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]+(?:[0-9]+)?)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output bytes of every collective op in the (per-device) module."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # match "<result-shape> <op-name>(" — the op defining line
+        for op in _COLLECTIVES:
+            # e.g.:  %all-reduce.1 = f32[128,256]{1,0} all-reduce(...)
+            if f" {op}(" in stripped or f" {op}-start(" in stripped:
+                m = _SHAPE_RE.findall(stripped.split("=", 1)[-1])
+                if m:
+                    # first shape after '=' is the result
+                    dtype, dims = m[0]
+                    # tuple results (e.g. all-reduce-start) list several; sum result side
+                    out[op] += _shape_bytes(dtype, dims)
+                    counts[op] += 1
+                break
+    out["_counts"] = counts  # type: ignore
+    return out
+
+
+@dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    technique: str
+    note: str
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops_total: float
+    useful_compute_ratio: float
+    collective_breakdown: Dict[str, float] = field(default_factory=dict)
+    memory_analysis: str = ""
+
+    def as_dict(self) -> dict:
+        return asdict(self)
+
+
+def analyze(
+    compiled,
+    *,
+    arch: str,
+    shape,
+    mesh,
+    technique: str,
+    note: str = "",
+    n_active_params: float = 0.0,
+    n_adapter_params: float = 0.0,
+) -> RooflineTerms:
+    # trip-count-aware cost model (XLA's cost_analysis counts scan bodies
+    # once — see launch/hlo_cost.py); numbers are per-device (post-SPMD HLO)
+    from repro.launch.hlo_cost import analyze_hlo
+
+    hlo = compiled.as_text()
+    cost = analyze_hlo(hlo)
+    flops = cost.flops
+    byts = cost.bytes
+    coll = {k: cost.collectives.get(k, 0.0) for k in _COLLECTIVES}
+    counts = {"n_total": cost.collective_count}
+    coll_weighted = cost.collective_bytes
+
+    t_comp = flops / PEAK_FLOPS_BF16
+    t_mem = byts / HBM_BW
+    t_coll = coll_weighted / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+
+    # MODEL_FLOPS, technique-aware: PAC+ pays 2·N·D backbone forward +
+    # 6·N_a·D side network (no backbone backward — the paper's savings);
+    # the cached variant drops the backbone forward entirely.
+    n_chips = math.prod(mesh.devices.shape)
+    B, S = shape.global_batch, shape.seq_len
+    if shape.mode == "train":
+        D = B * S
+        if technique == "pac":
+            mf = 2.0 * n_active_params * D + 6.0 * n_adapter_params * D
+        elif technique == "pac_cached":
+            mf = 6.0 * n_adapter_params * D
+        else:  # full / lora / adapters: full backward through the backbone
+            mf = 6.0 * n_active_params * D
+    elif shape.mode == "prefill":
+        mf = 2.0 * n_active_params * B * S
+    else:
+        mf = 2.0 * n_active_params * B  # one token per sequence
+    ratio = mf / (flops * n_chips) if flops else 0.0
+
+    try:
+        mem_an = str(compiled.memory_analysis())
+    except Exception as e:  # pragma: no cover
+        mem_an = f"unavailable: {e}"
+
+    return RooflineTerms(
+        arch=arch,
+        shape=shape.name,
+        mesh="x".join(map(str, mesh.devices.shape)),
+        technique=technique,
+        note=note,
+        flops_per_device=flops,
+        bytes_per_device=byts,
+        collective_bytes_per_device=coll_weighted,
+        t_compute=t_comp,
+        t_memory=t_mem,
+        t_collective=t_coll,
+        bottleneck=bottleneck,
+        model_flops_total=mf,
+        useful_compute_ratio=ratio,
+        collective_breakdown={**coll, **{f"n_{k}": v for k, v in counts.items()}},
+        memory_analysis=mem_an,
+    )
+
+
+def format_row(t: RooflineTerms) -> str:
+    return (
+        f"{t.arch:24s} {t.shape:12s} {t.mesh:8s} {t.technique:10s} {t.note:6s} "
+        f"comp={t.t_compute * 1e3:9.3f}ms mem={t.t_memory * 1e3:9.3f}ms "
+        f"coll={t.t_collective * 1e3:9.3f}ms -> {t.bottleneck:10s} "
+        f"useful={t.useful_compute_ratio * 100:6.2f}%"
+    )

@@ -1,0 +1,135 @@
+"""Sharding rules: parameter/activation pytrees → PartitionSpecs.
+
+Strategy (DESIGN.md §5): FSDP-style weight sharding over the ``data``
+(+``pod``) axes on d_model-like dims, tensor/expert parallelism over
+``model`` on head/FFN/expert/vocab dims. Rules are *divisibility-guarded*:
+a mesh axis is only applied to a dim it divides evenly, so one rule set
+covers every architecture and the reduced smoke configs alike.
+
+PAC+ specifics: the frozen backbone is sharded identically whether its
+leaves are f32 arrays or :class:`QTensor`s (the int payload keeps the
+original dim structure; per-block scales inherit the spec with the last
+dim replicated — they are tiny).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey, SequenceKey
+
+from repro.core.psharding import (
+    FSDP,
+    TP,
+    logical_for_param as _logical_for_param,
+    path_names as _path_names,
+    resolve as _presolve,
+)
+from repro.core.quantization import QTensor
+from repro.launch.mesh import data_axes
+
+DP = "dp"  # batch dim -> ("pod","data")
+SEQ = "seq"  # sequence dim (decode caches) -> "model"
+
+
+def param_specs(params, mesh: Mesh):
+    """PartitionSpec pytree for a parameter tree (QTensor-aware)."""
+
+    def spec_for(path, leaf):
+        names = _path_names(path)
+        if isinstance(leaf, QTensor):
+            logical = _logical_for_param(names, leaf.q.ndim)
+            q_spec = _presolve(logical, leaf.q.shape, mesh)
+            # scales: same leading layout, replicated block dim
+            s_logical = logical[:-1] + (None,)
+            s_spec = _presolve(s_logical, leaf.scale.shape, mesh)
+            return QTensor(q_spec, s_spec, leaf.bits, leaf.block, leaf.orig_last)
+        return _presolve(_logical_for_param(names, leaf.ndim), leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(
+        spec_for, params, is_leaf=lambda x: isinstance(x, QTensor)
+    )
+
+
+def batch_specs(batch, mesh: Mesh, shard_batch: bool = True):
+    """Specs for a training/serving batch dict."""
+    dp = data_axes(mesh)
+    dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def spec_for(path, leaf):
+        names = _path_names(path)
+        name = names[0] if names else ""
+        B_axis = dp_spec if shard_batch else None
+        if name == "positions" and leaf.ndim == 3:  # mrope (3,B,S)
+            return P(None, B_axis, None)
+        if name in ("tokens", "labels", "positions", "seq_ids"):
+            return P(*((B_axis,) + (None,) * (leaf.ndim - 1)))
+        if name == "embeds":
+            return P(B_axis, None, None)
+        if name in ("b0", "b_final"):  # cached activations: S over `model`
+            sq = "model" if ("model" in mesh.axis_names and leaf.shape[1] % mesh.shape["model"] == 0) else None
+            return P(B_axis, sq, None)
+        if name == "taps":
+            sq = "model" if ("model" in mesh.axis_names and leaf.shape[2] % mesh.shape["model"] == 0) else None
+            return P(None, B_axis, sq, None)
+        return P(*((None,) * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(spec_for, batch)
+
+
+def cache_specs(cache, mesh: Mesh, B: int):
+    """Decode-cache specs. Batch over data axes when divisible; the KV
+    sequence dim over `model` (and over everything for B=1 long-context)."""
+    dp = data_axes(mesh)
+    total_dp = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    shard_b = dp and B % total_dp == 0
+    b_axis = (dp if len(dp) > 1 else dp[0]) if shard_b else None
+
+    def spec_for(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        if name in ("k_scale", "v_scale"):  # (n_p, B, Smax, Hkv) - INT8 KV
+            s_ax = []
+            if "model" in mesh.axis_names and leaf.shape[2] % mesh.shape["model"] == 0:
+                s_ax = ["model"]
+            if not shard_b and dp and leaf.shape[2] % (total_dp * mesh.shape["model"]) == 0:
+                s_ax = list(dp) + ["model"]
+            s_spec = tuple(s_ax) if len(s_ax) > 1 else (s_ax[0] if s_ax else None)
+            return P(None, b_axis, s_spec, None)
+        if name in ("k", "v"):  # (n_p, B, Smax, Hkv, hd)
+            s_ax = []
+            if "model" in mesh.axis_names and leaf.shape[2] % mesh.shape["model"] == 0:
+                s_ax = ["model"]
+            if not shard_b and dp and leaf.shape[2] % (total_dp * mesh.shape["model"]) == 0:
+                s_ax = list(dp) + ["model"]  # B=1: spread KV over the whole mesh
+            s_spec = tuple(s_ax) if len(s_ax) > 1 else (s_ax[0] if s_ax else None)
+            return P(None, b_axis, s_spec, None, None)
+        if name == "h" and leaf.ndim == 4:  # mamba (n_p, B, di, ds)
+            tp = "model" if leaf.shape[2] % mesh.shape["model"] == 0 else None
+            return P(None, b_axis, tp, None)
+        if name == "conv":  # (n_p, B, dc-1, di)
+            tp = "model" if leaf.shape[3] % mesh.shape["model"] == 0 else None
+            return P(None, b_axis, None, tp)
+        # mlstm C/n/m, slstm c/n/h/m: batch-sharded, rest replicated
+        return P(*((None, b_axis) + (None,) * (leaf.ndim - 2))) if leaf.ndim >= 2 else P(
+            *((None,) * leaf.ndim)
+        )
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache)
+
+
+def to_named(tree_specs, mesh: Mesh):
+    """PartitionSpec pytree → NamedSharding pytree (QTensor-aware)."""
+
+    def f(s):
+        return NamedSharding(mesh, s)
+
+    def g(leaf):
+        if isinstance(leaf, QTensor):
+            return QTensor(f(leaf.q), f(leaf.scale), leaf.bits, leaf.block, leaf.orig_last)
+        return f(leaf)
+
+    return jax.tree.map(g, tree_specs, is_leaf=lambda x: isinstance(x, (P, QTensor)))

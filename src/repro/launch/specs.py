@@ -1,0 +1,217 @@
+"""Abstract input construction for the dry-run / roofline matrix.
+
+``build_case(arch, shape, mesh, ...)`` returns everything needed to lower
+one (architecture × input-shape) cell: the step function, abstract
+(ShapeDtypeStruct) arguments, and in/out shardings — no device memory is
+ever allocated (the same pattern as shannon/kernels: weak-type-correct,
+shardable stand-ins).
+
+Modality carve-out: for [audio]/[vlm] archs the frontend is a stub —
+``input_specs`` supplies precomputed frame/patch **embeddings** of the
+right shape (plus M-RoPE position ids for qwen2-vl), per the assignment.
+
+Decode shapes lower ``decode_step`` (ONE token against a seq_len-deep
+cache). ``long_500k`` uses each arch's sub-quadratic path; for pure
+full-attention archs the serving variant forces ``window=8192`` on every
+layer (marked ``sw8k`` in the roofline table).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, ArchConfig, InputShape, get_arch
+from repro.core import steps
+from repro.core.parallel_adapters import abstract_adapter
+from repro.core.quantization import quantize_tree
+from repro.launch import sharding as shard
+from repro.models import backbone as bb
+from repro.optim import adamw_init
+
+SERVE_WINDOW = 8192  # sliding-window serving variant for long_500k
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def abstract_params(cfg: ArchConfig, quant_bits: Optional[int] = None, dtype=jnp.float32):
+    """Abstract backbone params (optionally in quantized storage)."""
+    def build():
+        p = bb.init_backbone(jax.random.PRNGKey(0), cfg, dtype)
+        if quant_bits:
+            p = quantize_tree(p, bits=quant_bits)
+        return p
+
+    return jax.eval_shape(build)
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape, dtype=jnp.float32) -> dict:
+    """Abstract batch for the given input shape (assignment step 2)."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.mode == "decode":
+        S_tok = 1
+    else:
+        S_tok = S
+    batch: dict = {}
+    if cfg.frontend is not None:
+        # stub modality frontend: precomputed embeddings
+        batch["embeds"] = _sds((B, S_tok, cfg.d_model), dtype)
+    else:
+        batch["tokens"] = _sds((B, S_tok), jnp.int32)
+    if cfg.rope == "mrope":
+        batch["positions"] = _sds((3, B, S_tok), jnp.int32)
+    if shape.mode == "train":
+        batch["labels"] = _sds((B, S_tok), jnp.int32)
+    return batch
+
+
+@dataclass
+class Case:
+    """One lowering cell: callable + abstract args + shardings."""
+
+    name: str
+    fn: Callable
+    args: tuple
+    in_shardings: Any
+    out_shardings: Any
+    cfg: ArchConfig
+    shape: InputShape
+    note: str = ""
+
+    def lower(self):
+        jitted = jax.jit(
+            self.fn, in_shardings=self.in_shardings, out_shardings=self.out_shardings
+        )
+        return jitted.lower(*self.args)
+
+
+def resolve_cfg_for_shape(cfg: ArchConfig, shape: InputShape) -> tuple:
+    """Apply the long-context serving variant where required."""
+    note = ""
+    if shape.name == "long_500k" and not cfg.is_subquadratic():
+        cfg = cfg.with_window(SERVE_WINDOW)
+        note = "sw8k"
+    return cfg, note
+
+
+def build_case(
+    arch: str,
+    shape_name: str,
+    mesh,
+    technique: str = "pac",
+    quant_bits: Optional[int] = None,
+    r: int = 8,
+    dtype=jnp.float32,
+    kv_quant: Optional[int] = None,
+) -> Case:
+    cfg = get_arch(arch) if isinstance(arch, str) else arch
+    shape = INPUT_SHAPES[shape_name]
+    cfg, note = resolve_cfg_for_shape(cfg, shape)
+    if quant_bits:
+        note = (note + f" int{quant_bits}").strip()
+    if kv_quant:
+        note = (note + f" kv{kv_quant}").strip()
+
+    params = abstract_params(cfg, quant_bits, dtype)
+    p_spec = shard.to_named(shard.param_specs(params, mesh), mesh)
+    batch = input_specs(cfg, shape, dtype)
+    b_spec = shard.to_named(shard.batch_specs(batch, mesh, shard_batch=shape.global_batch > 1), mesh)
+
+    if shape.mode == "train":
+        if technique == "pac":
+            adapter = abstract_adapter(cfg, r, dtype)
+            a_spec = shard.to_named(shard.param_specs(adapter, mesh), mesh)
+            opt = jax.eval_shape(adamw_init, adapter)
+            o_spec = shard.to_named(shard.param_specs(opt, mesh), mesh)
+            fn = functools.partial(steps.pac_train_step, cfg=cfg, r=r)
+            args = (params, adapter, opt, batch)
+            in_sh = (p_spec, a_spec, o_spec, b_spec)
+            # taps/b0/b_final (the activation-cache outputs) must stay
+            # batch-sharded, never replicated (§Perf iteration 1)
+            B, S = shape.global_batch, shape.seq_len
+            dp = shard.data_axes(mesh)
+            dps = dp if len(dp) > 1 else dp[0]
+            # sequence-parallel residual stream (§Perf iteration 4): taps
+            # leave the step S-sharded over `model`
+            sq = "model" if S % mesh.shape["model"] == 0 else None
+            nb = shard.to_named
+            out_sh = (
+                None,  # loss
+                a_spec,
+                o_spec,
+                (
+                    nb(P(dps, sq, None), mesh),
+                    nb(P(None, dps, sq, None), mesh),
+                    nb(P(dps, sq, None), mesh),
+                ),
+            )
+        elif technique == "pac_cached":
+            adapter = abstract_adapter(cfg, r, dtype)
+            a_spec = shard.to_named(shard.param_specs(adapter, mesh), mesh)
+            opt = jax.eval_shape(adamw_init, adapter)
+            o_spec = shard.to_named(shard.param_specs(opt, mesh), mesh)
+            B, S = shape.global_batch, shape.seq_len
+            cached = {
+                "b0": _sds((B, S, cfg.d_model), dtype),
+                "taps": _sds((cfg.n_periods, B, S, cfg.d_model), dtype),
+                "b_final": _sds((B, S, cfg.d_model), dtype),
+                "labels": _sds((B, S), jnp.int32),
+            }
+            c_spec = shard.to_named(shard.batch_specs(cached, mesh), mesh)
+            fn = functools.partial(steps.pac_cached_train_step, cfg=cfg, r=r)
+            args = (params, adapter, opt, cached)
+            in_sh = (p_spec, a_spec, o_spec, c_spec)
+            out_sh = None
+        elif technique == "full":
+            opt = jax.eval_shape(adamw_init, params)
+            o_spec = shard.to_named(shard.param_specs(opt, mesh), mesh)
+            fn = functools.partial(steps.full_train_step, cfg=cfg)
+            args = (params, opt, batch)
+            in_sh = (p_spec, o_spec, b_spec)
+            out_sh = None
+        elif technique == "lora":
+            from repro.core.peft import init_lora
+
+            lora = jax.eval_shape(lambda: init_lora(jax.random.PRNGKey(0), cfg, dtype=dtype))
+            l_spec = shard.to_named(shard.param_specs(lora, mesh), mesh)
+            opt = jax.eval_shape(adamw_init, lora)
+            o_spec = shard.to_named(shard.param_specs(opt, mesh), mesh)
+            fn = functools.partial(steps.lora_train_step, cfg=cfg)
+            args = (params, lora, opt, batch)
+            in_sh = (p_spec, l_spec, o_spec, b_spec)
+            out_sh = None
+        else:
+            raise ValueError(technique)
+    elif shape.mode == "prefill":
+        fn = functools.partial(steps.prefill_step, cfg=cfg)
+        args = (params, batch)
+        in_sh = (p_spec, b_spec)
+        out_sh = None
+    else:  # decode
+        B, S = shape.global_batch, shape.seq_len
+        cache = jax.eval_shape(lambda: bb.init_cache(cfg, B, S, dtype, kv_quant=kv_quant))
+        c_spec = shard.to_named(shard.cache_specs(cache, mesh, B), mesh)
+        pos = _sds((), jnp.int32)
+        fn = functools.partial(steps.decode_step, cfg=cfg)
+        args = (params, batch, cache, pos)
+        in_sh = (p_spec, b_spec, c_spec, shard.to_named(P(), mesh))
+        # cache sharding must be stable step-over-step; logits layout is free
+        out_sh = (None, c_spec)
+    return Case(
+        name=f"{cfg.name}×{shape.name}",
+        fn=fn,
+        args=args,
+        in_shardings=in_sh,
+        out_shardings=out_sh,
+        cfg=cfg,
+        shape=shape,
+        note=note,
+    )

@@ -1,0 +1,127 @@
+"""End-to-end PAC+ trainer CLI.
+
+Runs the paper's full workflow (Fig. 4): quantize → init adapters →
+plan → epoch-1 (backbone fwd + adapter update, cache capture) →
+epoch≥2 (cache hit, adapter-only). CPU-runnable with --reduced.
+
+    PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
+        --reduced --epochs 3 --steps-per-epoch 8 --batch 4 --seq 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import get_arch
+from repro.core import steps
+from repro.core.activation_cache import ActivationCache
+from repro.core.init_methods import pruning_init
+from repro.core.parallel_adapters import init_adapter
+from repro.core.planner import (
+    HybridParallelismPlanner,
+    JETSON_NANO_H,
+    model_layer_costs,
+)
+from repro.core.quantization import quantize_tree, tree_storage_bytes
+from repro.data import DataPipeline, SyntheticPersonalCorpus
+from repro.models import backbone as bb
+from repro.optim import adamw_init, cosine_schedule
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--reduced", action="store_true", help="CPU-scale variant")
+    ap.add_argument("--epochs", type=int, default=3)
+    ap.add_argument("--steps-per-epoch", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--r", type=int, default=8, help="adapter reduction factor")
+    ap.add_argument("--quant", type=int, default=None, choices=[4, 8])
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--init", default="pruning", choices=["pruning", "random"])
+    ap.add_argument("--no-cache", action="store_true")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    print(f"arch={cfg.name} params≈{cfg.param_count()/1e6:.1f}M "
+          f"active≈{cfg.active_param_count()/1e6:.1f}M")
+
+    bp = bb.init_backbone(jax.random.PRNGKey(args.seed), cfg)
+    if args.quant:
+        bq = quantize_tree(bp, bits=args.quant)
+        print(f"backbone quantized INT{args.quant}: "
+              f"{tree_storage_bytes(bp)/2**20:.1f} MB → {tree_storage_bytes(bq)/2**20:.1f} MB")
+    else:
+        bq = bp
+    if args.init == "pruning":
+        adapter = pruning_init(jax.random.PRNGKey(args.seed + 1), bp, cfg, r=args.r)
+    else:
+        adapter = init_adapter(jax.random.PRNGKey(args.seed + 1), cfg, r=args.r)
+    n_train = sum(x.size for x in jax.tree.leaves(adapter))
+    print(f"trainable (adapter) params: {n_train/1e6:.2f}M "
+          f"({n_train/cfg.param_count():.2%} of backbone)")
+    opt = adamw_init(adapter)
+
+    # offline planning report (paper Step 3-4)
+    plan = HybridParallelismPlanner(
+        model_layer_costs(cfg, "pac", seq_len=args.seq), [JETSON_NANO_H] * 4,
+        args.batch, 4,
+    ).plan()
+    print("edge-pool plan:", plan.describe().splitlines()[0])
+
+    n_seq = args.steps_per_epoch * args.batch
+    corpus = SyntheticPersonalCorpus(cfg.vocab, args.seq + 1, n_seq, seed=args.seed)
+    pipe = DataPipeline(corpus, global_batch=args.batch, shuffle=True, seed=args.seed)
+    cache = ActivationCache(budget_bytes=4 << 30)
+    bfinal_cache = {}
+
+    step1 = jax.jit(functools.partial(steps.pac_train_step, cfg=cfg, r=args.r, lr=args.lr))
+    stepN = jax.jit(functools.partial(steps.pac_cached_train_step, cfg=cfg, r=args.r, lr=args.lr))
+
+    for epoch in range(args.epochs):
+        t0 = time.time()
+        losses = []
+        for batch in pipe.epoch(0):
+            ids = batch.pop("seq_ids")
+            hit = None if args.no_cache else cache.get_batch(ids)
+            if hit is None:
+                loss, adapter, opt, (b0, taps, bf) = step1(bq, adapter, opt, batch)
+                if not args.no_cache:
+                    cache.put_batch(ids, b0, taps)
+                    for i, k in enumerate(ids):
+                        bfinal_cache[int(k)] = np.asarray(bf)[i]
+            else:
+                b0, taps = hit
+                cached = {
+                    "b0": jnp.asarray(b0),
+                    "taps": jnp.asarray(taps),
+                    "b_final": jnp.asarray(np.stack([bfinal_cache[int(k)] for k in ids])),
+                    "labels": batch["labels"],
+                }
+                loss, adapter, opt = stepN(bq, adapter, opt, cached)
+            losses.append(float(loss))
+        dt = time.time() - t0
+        mode = "cached" if (epoch > 0 and not args.no_cache) else "full"
+        print(f"epoch {epoch}: loss={np.mean(losses):.4f} time={dt:.1f}s ({mode}) "
+              f"cache[{len(cache)} seqs, {cache.nbytes/2**20:.0f} MB]")
+
+    if args.ckpt:
+        n = save_checkpoint(args.ckpt, {"adapter": adapter, "config": cfg.name})
+        print(f"checkpoint: {args.ckpt} ({n/2**20:.1f} MB)")
+    cache.clear()
+
+
+if __name__ == "__main__":
+    main()

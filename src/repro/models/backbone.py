@@ -1,0 +1,296 @@
+"""Pattern-driven decoder backbone.
+
+One configurable decoder covers all 10 assigned architectures: an
+:class:`~repro.configs.base.ArchConfig` declares a *period* of
+heterogeneous :class:`LayerSpec`s (attention / mamba / mLSTM / sLSTM,
+dense-FFN / MoE / no-FFN) which is tiled ``n_periods`` times. Parameters
+are stacked over periods and the forward pass is a ``jax.lax.scan`` over
+the stack, so the lowered HLO is depth-independent (critical for the
+512-device dry-run compile budget).
+
+The forward pass optionally emits **taps** — the hidden state after every
+period — which are exactly the invariant activations ``b_i`` the PAC+
+Parallel Adapters consume (`repro.core.parallel_adapters`) and the
+activation cache stores (`repro.core.activation_cache`).
+
+Decode runs one token against a per-layer-kind state cache (KV for
+attention, (h, conv) for Mamba, (C, n, m) for mLSTM, (c, n, h, m) for
+sLSTM), also scanned over periods.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import psharding
+from repro.core.quantization import maybe_dequantize_tree
+from repro.models import ssm
+from repro.models.layers import (
+    attention_decode,
+    attention_decode_quant,
+    attention_forward,
+    init_attention,
+    init_mlp,
+    mlp_forward,
+    rms_norm,
+    softcap,
+)
+from repro.models.moe import init_moe, moe_forward, moe_forward_dense
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_block(rng, cfg, spec, dtype=jnp.float32) -> dict:
+    """Parameters for one layer position."""
+    d = cfg.d_model
+    k1, k2, k3 = jax.random.split(rng, 3)
+    p = {"ln1": jnp.zeros((d,), dtype)}
+    if spec.kind == "attn":
+        p["mixer"] = init_attention(k1, cfg, dtype)
+    elif spec.kind == "mamba":
+        p["mixer"] = ssm.init_mamba(k1, cfg, dtype)
+    elif spec.kind == "mlstm":
+        p["mixer"] = ssm.init_mlstm(k1, cfg, dtype)
+    elif spec.kind == "slstm":
+        p["mixer"] = ssm.init_slstm(k1, cfg, dtype)
+    else:
+        raise ValueError(f"unknown layer kind {spec.kind!r}")
+    if spec.ffn and (cfg.d_ff or (spec.moe and cfg.moe)):
+        p["ln2"] = jnp.zeros((d,), dtype)
+        if spec.moe and cfg.moe is not None:
+            p["ffn"] = init_moe(k2, d, cfg.moe, dtype)
+        else:
+            p["ffn"] = init_mlp(k3, d, cfg.d_ff, dtype)
+    return p
+
+
+def init_backbone(rng, cfg, dtype=jnp.float32) -> dict:
+    """Full backbone parameter pytree; block leaves stacked over periods."""
+    n_p = cfg.n_periods
+    k_embed, k_head, k_blocks = jax.random.split(rng, 3)
+    blocks = []
+    for i, spec in enumerate(cfg.pattern):
+        rngs = jax.random.split(jax.random.fold_in(k_blocks, i), n_p)
+        blocks.append(jax.vmap(lambda r, s=spec: init_block(r, cfg, s, dtype))(rngs))
+    params = {
+        "embed": (jax.random.normal(k_embed, (cfg.vocab, cfg.d_model)) * cfg.d_model ** -0.5).astype(dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        "blocks": blocks,
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(k_head, (cfg.d_model, cfg.vocab)) * cfg.d_model ** -0.5
+        ).astype(dtype)
+    return params
+
+
+def abstract_backbone(cfg, dtype=jnp.float32):
+    """ShapeDtypeStruct pytree of the params — no allocation (dry-run path)."""
+    return jax.eval_shape(lambda: init_backbone(jax.random.PRNGKey(0), cfg, dtype))
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def apply_block(p, x, cfg, spec, positions):
+    # FSDP weight gather (§Perf iteration 2): replicate this layer's slice
+    # over the data axes so GSPMD all-gathers weights (not activations).
+    # Gather BEFORE dequantizing — the int8 payload is 4× cheaper to move
+    # (§Perf kimi iter H). No-op outside a `model`-axis mesh.
+    p = psharding.gather_for_compute(p)
+    p = maybe_dequantize_tree(p)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if spec.kind == "attn":
+        mix = attention_forward(p["mixer"], h, cfg, spec, positions)
+    elif spec.kind == "mamba":
+        mix = ssm.mamba_forward(p["mixer"], h, cfg)
+    elif spec.kind == "mlstm":
+        mix = ssm.mlstm_forward(p["mixer"], h, cfg)
+    elif spec.kind == "slstm":
+        mix = ssm.slstm_forward(p["mixer"], h, cfg)
+    x = psharding.constrain_hidden(x + mix)
+    if "ffn" in p:
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if spec.moe and cfg.moe is not None:
+            x = x + moe_forward(p["ffn"], h, cfg.moe)
+        else:
+            x = x + mlp_forward(p["ffn"], h)
+        x = psharding.constrain_hidden(x)
+    return x
+
+
+def embed_inputs(params, cfg, batch: dict):
+    """Token embedding or stub-frontend embeddings.
+
+    batch: {"tokens": (B,S) int32} and/or {"embeds": (B,S,d)};
+    optional {"positions": (B,S) or (3,B,S)}.
+    """
+    if "embeds" in batch:
+        x = batch["embeds"]
+        B, S = x.shape[:2]
+    else:
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        embed = maybe_dequantize_tree(params["embed"])
+        x = jnp.take(embed, tokens, axis=0)
+    if "positions" in batch:
+        positions = batch["positions"]
+    elif cfg.rope == "mrope":
+        pos1 = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        positions = jnp.broadcast_to(pos1, (3, B, S))
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    return x, positions
+
+
+def backbone_forward(params, cfg, batch: dict, collect_taps: bool = False):
+    """Returns (final_hidden (B,S,d), taps (n_periods,B,S,d) | None)."""
+    x, positions = embed_inputs(params, cfg, batch)
+
+    def period_fn(carry, block_slice):
+        h = carry
+        for i, spec in enumerate(cfg.pattern):
+            h = apply_block(block_slice[i], h, cfg, spec, positions)
+        return h, (h if collect_taps else None)
+
+    x, taps = jax.lax.scan(period_fn, x, tuple(params["blocks"]))
+    return x, taps
+
+
+def logits_from_hidden(params, cfg, h):
+    p_norm = maybe_dequantize_tree(params["final_norm"])
+    h = rms_norm(h, p_norm, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        w = maybe_dequantize_tree(params["embed"]).T
+    else:
+        w = maybe_dequantize_tree(params["lm_head"])
+    logits = h @ w
+    return softcap(logits, cfg.logit_softcap)
+
+
+def backbone_logits(params, cfg, batch: dict):
+    h, _ = backbone_forward(params, cfg, batch)
+    return logits_from_hidden(params, cfg, h)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, ignore: int = -100):
+    """Mean CE over non-ignored positions. logits (B,S,V), labels (B,S).
+
+    Implemented as a one-hot contraction rather than take_along_axis: with
+    the vocab dim sharded over the `model` mesh axis, a gather-by-label
+    would force GSPMD to all-gather the full (B,S,V) logits (~370 GB for
+    internlm2×train_4k — measured in EXPERIMENTS.md §Perf iteration 1).
+    The one-hot product reduces over the sharded vocab locally and
+    all-reduces only (B,S) partials.
+    """
+    mask = labels != ignore
+    labels = jnp.where(mask, labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logp.dtype)
+    nll = -jnp.einsum("bsv,bsv->bs", logp, onehot)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token against a cache)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg, B: int, max_len: int, dtype=jnp.float32, kv_quant=None):
+    """Cache pytree: one entry per pattern position, stacked over periods.
+
+    kv_quant=8 stores attention K/V as INT8 with per-(token, kv-head)
+    absmax scales (the paper's Eq. 1 applied to the KV cache — a
+    beyond-paper serving feature; 4× less HBM read at decode)."""
+
+    def one(spec):
+        if spec.kind == "attn":
+            if kv_quant == 8:
+                return {
+                    "k": jnp.zeros((B, max_len, cfg.n_kv_heads, cfg.hd), jnp.int8),
+                    "v": jnp.zeros((B, max_len, cfg.n_kv_heads, cfg.hd), jnp.int8),
+                    "k_scale": jnp.zeros((B, max_len, cfg.n_kv_heads), jnp.float32),
+                    "v_scale": jnp.zeros((B, max_len, cfg.n_kv_heads), jnp.float32),
+                }
+            return {
+                "k": jnp.zeros((B, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+                "v": jnp.zeros((B, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+            }
+        if spec.kind == "mamba":
+            return ssm.init_mamba_cache(cfg, B, dtype)
+        if spec.kind == "mlstm":
+            return ssm.init_mlstm_cache(cfg, B)
+        if spec.kind == "slstm":
+            return ssm.init_slstm_cache(cfg, B)
+        raise ValueError(spec.kind)
+
+    caches = []
+    for spec in cfg.pattern:
+        single = one(spec)
+        caches.append(
+            jax.tree.map(lambda t: jnp.broadcast_to(t[None], (cfg.n_periods,) + t.shape), single)
+        )
+    return caches
+
+
+def abstract_cache(cfg, B: int, max_len: int, dtype=jnp.float32, kv_quant=None):
+    return jax.eval_shape(lambda: init_cache(cfg, B, max_len, dtype, kv_quant=kv_quant))
+
+
+def apply_block_decode(p, x, cfg, spec, cache, pos):
+    p = maybe_dequantize_tree(p)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if spec.kind == "attn":
+        if "k_scale" in cache:  # INT8 KV cache (beyond-paper serving)
+            mix, new_cache = attention_decode_quant(p["mixer"], h, cfg, spec, cache, pos)
+        else:
+            mix, ck, cv = attention_decode(p["mixer"], h, cfg, spec, cache["k"], cache["v"], pos)
+            new_cache = {"k": ck, "v": cv}
+    elif spec.kind == "mamba":
+        mix, new_cache = ssm.mamba_decode(p["mixer"], h, cfg, cache)
+    elif spec.kind == "mlstm":
+        mix, new_cache = ssm.mlstm_decode(p["mixer"], h, cfg, cache)
+    elif spec.kind == "slstm":
+        mix, new_cache = ssm.slstm_decode(p["mixer"], h, cfg, cache)
+    x = x + mix
+    if "ffn" in p:
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if spec.moe and cfg.moe is not None:
+            # decode: T = B tokens — widen capacity (cheap at decode T) to
+            # make token drops rare; serving should not drop tokens.
+            x = x + moe_forward(p["ffn"], h, cfg.moe, capacity_factor=2.0 * cfg.moe.capacity_factor)
+        else:
+            x = x + mlp_forward(p["ffn"], h)
+    return x, new_cache
+
+
+def backbone_decode(params, cfg, token_batch: dict, cache, pos):
+    """One decode step.
+
+    token_batch: {"tokens": (B,1)} or {"embeds": (B,1,d)}; pos: () int32 —
+    the index the new token is written at. Returns (logits (B,1,V), cache').
+    """
+    if "embeds" in token_batch:
+        x = token_batch["embeds"]
+    else:
+        embed = maybe_dequantize_tree(params["embed"])
+        x = jnp.take(embed, token_batch["tokens"], axis=0)
+
+    def period_fn(carry, xs):
+        block_slice, cache_slice = xs
+        h = carry
+        new_caches = []
+        for i, spec in enumerate(cfg.pattern):
+            h, nc = apply_block_decode(block_slice[i], h, cfg, spec, cache_slice[i], pos)
+            new_caches.append(nc)
+        return h, tuple(new_caches)
+
+    x, new_cache = jax.lax.scan(period_fn, x, (tuple(params["blocks"]), tuple(cache)))
+    return logits_from_hidden(params, cfg, x), list(new_cache)

@@ -1,0 +1,356 @@
+"""State-space / recurrent sequence mixers: Mamba (S6), xLSTM mLSTM & sLSTM.
+
+TPU adaptation notes (see DESIGN.md §2):
+
+* **mLSTM** uses the chunkwise-parallel formulation — quadratic *within* a
+  chunk (MXU-friendly (c×c) matmuls), recurrent *across* chunks with a
+  stabilised (C, n, m) matrix-memory carry. This is the TPU-native
+  re-think of the CUDA fused-scan kernel in the xLSTM release.
+* **Mamba** runs the selective scan as a ``lax.scan`` over time steps,
+  chunk-checkpointed so the backward pass recomputes states within a
+  chunk instead of materialising (B, S, d_inner, d_state) residuals.
+* **sLSTM** is inherently sequential (recurrent h→gates dependency) and
+  runs as a plain scan with per-head block-diagonal recurrent weights.
+
+All mixers expose ``*_forward`` (train/prefill over a full sequence) and
+``*_decode`` (single step with an explicit state cache).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Mamba (S6)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba(rng, cfg, dtype=jnp.float32):
+    d, di, ds, dc = cfg.d_model, cfg.d_inner, cfg.ssm_d_state, cfg.ssm_d_conv
+    dt_rank = max(1, d // 16)
+    ks = jax.random.split(rng, 7)
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, 2 * di)) * d ** -0.5).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (dc, di)) * dc ** -0.5).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "w_bc": (jax.random.normal(ks[2], (di, 2 * ds)) * di ** -0.5).astype(dtype),
+        "w_dt1": (jax.random.normal(ks[3], (di, dt_rank)) * di ** -0.5).astype(dtype),
+        "w_dt2": (jax.random.normal(ks[4], (dt_rank, di)) * dt_rank ** -0.5).astype(dtype),
+        "dt_bias": jnp.full((di,), -4.6, dtype),  # softplus^-1(0.01)
+        "a_log": jnp.log(jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))),
+        "d_skip": jnp.ones((di,), dtype),
+        "out_proj": (jax.random.normal(ks[5], (di, d)) * di ** -0.5).astype(dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B,S,di); w: (dc,di)."""
+    dc = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (dc - 1, 0), (0, 0)))
+    out = sum(xp[:, i : xp.shape[1] - dc + 1 + i, :] * w[i] for i in range(dc))
+    return out + b
+
+
+def _mamba_chunk(h0, xs, a):
+    """Inner sequential scan over one chunk. h0: (B,di,ds)."""
+
+    def step(h, t):
+        xt, dt, bt, ct = t  # (B,di), (B,di), (B,ds), (B,ds)
+        da = jnp.exp(dt[..., None] * a)  # (B,di,ds)
+        h = h * da + (dt * xt)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bds,bs->bd", h, ct)
+        return h, y
+
+    h, ys = jax.lax.scan(step, h0, xs)
+    return h, ys  # ys: (c, B, di)
+
+
+def mamba_forward(p, x: jax.Array, cfg, chunk: int = 128) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d)."""
+    B, S, d = x.shape
+    di, ds = cfg.d_inner, cfg.ssm_d_state
+    xz = x @ p["in_proj"]
+    xs, res = jnp.split(xz, 2, axis=-1)
+    xs = jax.nn.silu(_causal_conv(xs, p["conv_w"], p["conv_b"]))  # (B,S,di)
+    bc = xs @ p["w_bc"]
+    b_t, c_t = jnp.split(bc.astype(jnp.float32), 2, axis=-1)  # (B,S,ds)
+    dt = jax.nn.softplus((xs @ p["w_dt1"]) @ p["w_dt2"] + p["dt_bias"]).astype(jnp.float32)
+    a = -jnp.exp(p["a_log"])  # (di,ds)
+
+    nc = max(1, -(-S // chunk))
+    pad = nc * chunk - S
+    seqs = (xs.astype(jnp.float32), dt, b_t, c_t)
+    if pad:
+        seqs = tuple(jnp.pad(t, ((0, 0), (0, pad), (0, 0))) for t in seqs)
+    # (nc, chunk, B, ...)
+    seqs = tuple(
+        t.reshape(B, nc, chunk, t.shape[-1]).transpose(1, 2, 0, 3) for t in seqs
+    )
+
+    chunk_fn = jax.checkpoint(lambda h, t: _mamba_chunk(h, t, a))
+
+    def outer(h, t):
+        h, ys = chunk_fn(h, t)
+        return h, ys
+
+    h0 = jnp.zeros((B, di, ds), jnp.float32)
+    _, ys = jax.lax.scan(outer, h0, seqs)  # (nc, chunk, B, di)
+    y = ys.transpose(2, 0, 1, 3).reshape(B, nc * chunk, di)[:, :S]
+    y = y + xs.astype(jnp.float32) * p["d_skip"]
+    y = (y * jax.nn.silu(res.astype(jnp.float32))).astype(x.dtype)
+    return y @ p["out_proj"]
+
+
+def init_mamba_cache(cfg, B: int, dtype=jnp.float32):
+    return {
+        "h": jnp.zeros((B, cfg.d_inner, cfg.ssm_d_state), jnp.float32),
+        "conv": jnp.zeros((B, cfg.ssm_d_conv - 1, cfg.d_inner), dtype),
+    }
+
+
+def mamba_decode(p, x: jax.Array, cfg, cache):
+    """x: (B,1,d); cache: {"h": (B,di,ds), "conv": (B,dc-1,di)}."""
+    B = x.shape[0]
+    xz = x[:, 0] @ p["in_proj"]
+    xs, res = jnp.split(xz, 2, axis=-1)  # (B,di)
+    conv_in = jnp.concatenate([cache["conv"], xs[:, None, :]], axis=1)  # (B,dc,di)
+    xc = jnp.einsum("bcd,cd->bd", conv_in, p["conv_w"]) + p["conv_b"]
+    xc = jax.nn.silu(xc)
+    bc = (xc @ p["w_bc"]).astype(jnp.float32)
+    b_t, c_t = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus((xc @ p["w_dt1"]) @ p["w_dt2"] + p["dt_bias"]).astype(jnp.float32)
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(dt[..., None] * a)
+    h = cache["h"] * da + (dt * xc.astype(jnp.float32))[..., None] * b_t[:, None, :]
+    y = jnp.einsum("bds,bs->bd", h, c_t) + xc.astype(jnp.float32) * p["d_skip"]
+    y = (y * jax.nn.silu(res.astype(jnp.float32))).astype(x.dtype)
+    out = (y @ p["out_proj"])[:, None, :]
+    new_cache = {"h": h, "conv": conv_in[:, 1:, :]}
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix memory) — chunkwise parallel
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(rng, cfg, dtype=jnp.float32):
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    ks = jax.random.split(rng, 6)
+    s = d ** -0.5
+    return {
+        "wq": (jax.random.normal(ks[0], (d, H * hd)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, H * hd)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, H * hd)) * s).astype(dtype),
+        "wi": (jax.random.normal(ks[3], (d, H)) * s).astype(jnp.float32),
+        "wf": (jax.random.normal(ks[4], (d, H)) * s).astype(jnp.float32),
+        "f_bias": jnp.full((H,), 3.0, jnp.float32),  # bias toward remembering
+        "wo": (jax.random.normal(ks[5], (H * hd, d)) * s).astype(dtype),
+        "ogate": (jax.random.normal(ks[0], (d, H * hd)) * s).astype(dtype),
+    }
+
+
+def _mlstm_chunk(carry, xs, hd):
+    """One chunk of the stabilised chunkwise mLSTM.
+
+    carry: C (B,H,hd,hd), n (B,H,hd), m (B,H)
+    xs: q,k,v (c,B,H,hd); lf, li (c,B,H) log-gates
+    """
+    C, n, m = carry
+    q, k, v, lf, li = xs
+    c = q.shape[0]
+    # cumulative log-forget inside the chunk, F_t = sum_{s<=t} lf_s
+    F = jnp.cumsum(lf, axis=0)  # (c,B,H)
+    Ftot = F[-1]
+    # A[i,j] = F_i - F_j + li_j  (contribution of step j to step i), j<=i
+    Aij = F[:, None] - F[None, :] + li[None, :]  # (c,c,B,H)
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    Aij = jnp.where(tri[:, :, None, None], Aij, -jnp.inf)
+    # carry contribution log-scale per row: F_i + m
+    carry_scale = F + m[None]  # (c,B,H)
+    M = jnp.maximum(jnp.max(Aij, axis=1), carry_scale)  # (c,B,H)
+    M = jnp.maximum(M, -1e30)
+    D = jnp.exp(Aij - M[:, None])  # (c,c,B,H) intra-chunk decay weights
+    S = jnp.einsum("ibhd,jbhd->ijbh", q, k) * (hd ** -0.5) * D
+    num_intra = jnp.einsum("ijbh,jbhd->ibhd", S, v)
+    den_intra = jnp.sum(S, axis=1)  # (c,B,H)
+    carry_w = jnp.exp(carry_scale - M)  # (c,B,H)
+    num_carry = jnp.einsum("ibhd,bhde->ibhe", q, C) * (hd ** -0.5) * carry_w[..., None]
+    den_carry = jnp.einsum("ibhd,bhd->ibh", q, n) * (hd ** -0.5) * carry_w
+    num = num_intra + num_carry
+    den = den_intra + den_carry
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-M))[..., None]
+    # update carry to end of chunk
+    m_new = jnp.maximum(Ftot + m, jnp.max(Ftot[None] - F + li, axis=0))
+    w_old = jnp.exp(Ftot + m - m_new)  # (B,H)
+    w_j = jnp.exp(Ftot[None] - F + li - m_new[None])  # (c,B,H)
+    C_new = C * w_old[..., None, None] + jnp.einsum("jbhd,jbhe->bhde", k * w_j[..., None], v)
+    n_new = n * w_old[..., None] + jnp.einsum("jbhd,jbh->bhd", k, w_j)
+    return (C_new, n_new, m_new), h
+
+
+def mlstm_forward(p, x: jax.Array, cfg) -> jax.Array:
+    """x: (B,S,d) -> (B,S,d). Chunkwise-parallel stabilised mLSTM."""
+    B, S, d = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    chunk = min(cfg.mlstm_chunk, S)
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (x @ p["wk"]).reshape(B, S, H, hd)
+    v = (x @ p["wv"]).reshape(B, S, H, hd)
+    og = jax.nn.sigmoid((x @ p["ogate"]).reshape(B, S, H, hd))
+    li = (x.astype(jnp.float32) @ p["wi"])  # log input gate (pre-exp)
+    lf = jax.nn.log_sigmoid(x.astype(jnp.float32) @ p["wf"] + p["f_bias"])
+
+    nc = max(1, -(-S // chunk))
+    pad = nc * chunk - S
+
+    def prep(t, fill=0.0):
+        if pad:
+            cfgpad = [(0, 0)] * t.ndim
+            cfgpad[1] = (0, pad)
+            t = jnp.pad(t, cfgpad, constant_values=fill)
+        t = t.reshape((B, nc, chunk) + t.shape[2:])
+        return jnp.moveaxis(t, 0, 2).reshape((nc, chunk, B) + t.shape[3:])
+
+    qs, ks_, vs = prep(q.astype(jnp.float32)), prep(k.astype(jnp.float32)), prep(v.astype(jnp.float32))
+    lis = prep(li, fill=-1e30)  # padded steps contribute nothing
+    lfs = prep(lf, fill=0.0)
+
+    chunk_fn = jax.checkpoint(functools.partial(_mlstm_chunk, hd=hd))
+    C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, H, hd), jnp.float32)
+    # m is the log-scale of the (zero) initial carry; 0 keeps padded-chunk
+    # arithmetic finite (never -inf - -inf).
+    m0 = jnp.zeros((B, H), jnp.float32)
+    _, hs = jax.lax.scan(chunk_fn, (C0, n0, m0), (qs, ks_, vs, lfs, lis))
+    # hs: (nc, chunk, B, H, hd) -> (B, S, H, hd)
+    h = jnp.moveaxis(hs.reshape(nc * chunk, B, H, hd), 1, 0)[:, :S]
+    h = (h.astype(x.dtype) * og).reshape(B, S, H * hd)
+    return h @ p["wo"]
+
+
+def init_mlstm_cache(cfg, B: int):
+    H, hd = cfg.n_heads, cfg.hd
+    return {
+        "C": jnp.zeros((B, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((B, H, hd), jnp.float32),
+        "m": jnp.zeros((B, H), jnp.float32),
+    }
+
+
+def mlstm_decode(p, x: jax.Array, cfg, cache):
+    """Single-step recurrent mLSTM. x: (B,1,d)."""
+    B, _, d = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    xt = x[:, 0]
+    q = (xt @ p["wq"]).reshape(B, H, hd).astype(jnp.float32)
+    k = (xt @ p["wk"]).reshape(B, H, hd).astype(jnp.float32)
+    v = (xt @ p["wv"]).reshape(B, H, hd).astype(jnp.float32)
+    og = jax.nn.sigmoid((xt @ p["ogate"]).reshape(B, H, hd))
+    li = xt.astype(jnp.float32) @ p["wi"]  # (B,H)
+    lf = jax.nn.log_sigmoid(xt.astype(jnp.float32) @ p["wf"] + p["f_bias"])
+    C, n, m = cache["C"], cache["n"], cache["m"]
+    m_new = jnp.maximum(lf + m, li)
+    wf = jnp.exp(lf + m - m_new)
+    wi = jnp.exp(li - m_new)
+    C = C * wf[..., None, None] + wi[..., None, None] * jnp.einsum("bhd,bhe->bhde", k, v)
+    n = n * wf[..., None] + wi[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C) * (hd ** -0.5)
+    den = jnp.einsum("bhd,bhd->bh", q, n) * (hd ** -0.5)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    h = (h.astype(x.dtype) * og).reshape(B, 1, H * hd)
+    return h @ p["wo"], {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM scalar memory) — sequential with block-diagonal recurrence
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(rng, cfg, dtype=jnp.float32):
+    d, H = cfg.d_model, cfg.n_heads
+    hd = d // H
+    ks = jax.random.split(rng, 6)
+    s = d ** -0.5
+    return {
+        "wz": (jax.random.normal(ks[0], (d, d)) * s).astype(dtype),
+        "wi": (jax.random.normal(ks[1], (d, d)) * s).astype(jnp.float32),
+        "wf": (jax.random.normal(ks[2], (d, d)) * s).astype(jnp.float32),
+        "wog": (jax.random.normal(ks[3], (d, d)) * s).astype(dtype),
+        # block-diagonal recurrent weights, one (hd,hd) block per head
+        "rz": (jax.random.normal(ks[4], (H, hd, hd)) * hd ** -0.5).astype(jnp.float32),
+        "ri": jnp.zeros((H, hd, hd), jnp.float32),
+        "rf": jnp.zeros((H, hd, hd), jnp.float32),
+        "f_bias": jnp.full((d,), 3.0, jnp.float32),
+        "wo": (jax.random.normal(ks[5], (d, d)) * s).astype(dtype),
+    }
+
+
+def _slstm_step(p, carry, xt, H):
+    """carry: (c, n, h, m) each (B, d) f32; xt pre-projected gates."""
+    c, n, h, m = carry
+    xz, xi, xf, xo = xt
+    B, d = h.shape
+    hh = h.reshape(B, H, d // H)
+    rec = lambda r: jnp.einsum("bhd,hde->bhe", hh, r).reshape(B, d)
+    z = jnp.tanh(xz + rec(p["rz"]))
+    li = xi + rec(p["ri"])
+    lf = jax.nn.log_sigmoid(xf + rec(p["rf"]) + p["f_bias"])
+    o = jax.nn.sigmoid(xo)
+    m_new = jnp.maximum(lf + m, li)
+    c = c * jnp.exp(lf + m - m_new) + jnp.exp(li - m_new) * z
+    n = n * jnp.exp(lf + m - m_new) + jnp.exp(li - m_new)
+    h_new = o * c / jnp.maximum(n, 1e-6)
+    return (c, n, h_new, m_new)
+
+
+def slstm_forward(p, x: jax.Array, cfg, chunk: int = 64) -> jax.Array:
+    B, S, d = x.shape
+    H = cfg.n_heads
+    xz = (x @ p["wz"]).astype(jnp.float32)
+    xi = x.astype(jnp.float32) @ p["wi"]
+    xf = x.astype(jnp.float32) @ p["wf"]
+    xo = (x @ p["wog"]).astype(jnp.float32)
+
+    def step(carry, t):
+        new = _slstm_step(p, carry, t, H)
+        return new, new[2]
+
+    def chunk_body(carry, ts):
+        return jax.lax.scan(step, carry, ts)
+
+    nc = max(1, -(-S // chunk))
+    pad = nc * chunk - S
+    seqs = (xz, xi, xf, xo)
+    if pad:
+        seqs = tuple(jnp.pad(t, ((0, 0), (0, pad), (0, 0))) for t in seqs)
+    seqs = tuple(t.reshape(B, nc, chunk, d).transpose(1, 2, 0, 3) for t in seqs)
+    z0 = jnp.zeros((B, d), jnp.float32)
+    carry0 = (z0, z0, z0, jnp.full((B, d), -1e30, jnp.float32))
+    _, hs = jax.lax.scan(jax.checkpoint(chunk_body), carry0, seqs)
+    h = hs.reshape(nc * chunk, B, d).transpose(1, 0, 2)[:, :S]
+    return h.astype(x.dtype) @ p["wo"]
+
+
+def init_slstm_cache(cfg, B: int):
+    d = cfg.d_model
+    z = jnp.zeros((B, d), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((B, d), -1e30, jnp.float32)}
+
+
+def slstm_decode(p, x: jax.Array, cfg, cache):
+    B = x.shape[0]
+    xt = x[:, 0]
+    t = (
+        (xt @ p["wz"]).astype(jnp.float32),
+        xt.astype(jnp.float32) @ p["wi"],
+        xt.astype(jnp.float32) @ p["wf"],
+        (xt @ p["wog"]).astype(jnp.float32),
+    )
+    carry = (cache["c"], cache["n"], cache["h"], cache["m"])
+    c, n, h, m = _slstm_step(p, carry, t, cfg.n_heads)
+    out = (h.astype(x.dtype) @ p["wo"])[:, None, :]
+    return out, {"c": c, "n": n, "h": h, "m": m}

@@ -1,0 +1,105 @@
+"""Pallas kernels vs jnp oracles — interpret mode, shape/dtype sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantization import quantize
+from repro.kernels import ref
+from repro.kernels.adapter_fuse import adapter_fuse
+from repro.kernels.flash_attention import flash_attention_tpu
+from repro.kernels.quant_matmul import quant_matmul
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# quant_matmul
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+@pytest.mark.parametrize(
+    "M,K,N,bm,bn,bk",
+    [
+        (64, 256, 128, 64, 128, 128),
+        (128, 512, 256, 64, 128, 256),
+        (256, 256, 512, 128, 256, 256),
+    ],
+)
+def test_quant_matmul_sweep(bits, M, K, N, bm, bn, bk):
+    x = jax.random.normal(KEY, (M, K), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(KEY, 1), (K, N))
+    qt = quantize(w, bits=bits, block=128)
+    out = quant_matmul(x, qt.q, qt.scale, bits=bits, bm=bm, bn=bn, bk=bk, interpret=True)
+    want = ref.quant_matmul_ref(x, qt.q, qt.scale, bits)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-3, rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quant_matmul_dtypes(dtype):
+    x = jax.random.normal(KEY, (64, 256)).astype(dtype)
+    w = jax.random.normal(jax.random.fold_in(KEY, 2), (256, 128))
+    qt = quantize(w, bits=8, block=128)
+    out = quant_matmul(x, qt.q, qt.scale, bits=8, bm=64, bn=128, bk=256, interpret=True)
+    assert out.dtype == dtype
+    want = ref.quant_matmul_ref(x.astype(jnp.float32), qt.q, qt.scale, 8)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want), atol=0.15, rtol=0.05
+    )
+
+
+# ---------------------------------------------------------------------------
+# adapter_fuse
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "T,d,da,lam", [(128, 256, 64, 0.5), (256, 512, 128, 0.0), (64, 128, 128, 1.0)]
+)
+def test_adapter_fuse_sweep(T, d, da, lam):
+    b = jax.random.normal(KEY, (T, d))
+    w = jax.random.normal(jax.random.fold_in(KEY, 3), (d, da))
+    a = jax.random.normal(jax.random.fold_in(KEY, 4), (T, da))
+    out = adapter_fuse(b, w, a, jnp.float32(lam), bt=64, bj=64, bk=128, interpret=True)
+    want = ref.adapter_fuse_ref(b, w, a, lam)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("window", [None, 32])
+@pytest.mark.parametrize("cap", [None, 30.0])
+def test_flash_kernel_variants(causal, window, cap):
+    BH, S, hd = 3, 128, 32
+    q = jax.random.normal(KEY, (BH, S, hd))
+    k = jax.random.normal(jax.random.fold_in(KEY, 5), (BH, S, hd))
+    v = jax.random.normal(jax.random.fold_in(KEY, 6), (BH, S, hd))
+    out = flash_attention_tpu(
+        q, k, v, causal=causal, window=window, attn_softcap=cap, bq=32, bk=32, interpret=True
+    )
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window, attn_softcap=cap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    s_exp=st.integers(5, 8),
+    hd=st.sampled_from([16, 64, 128]),
+    seed=st.integers(0, 1000),
+)
+def test_flash_kernel_property(s_exp, hd, seed):
+    S = 2 ** s_exp
+    k0 = jax.random.PRNGKey(seed)
+    q = jax.random.normal(k0, (2, S, hd))
+    k = jax.random.normal(jax.random.fold_in(k0, 1), (2, S, hd))
+    v = jax.random.normal(jax.random.fold_in(k0, 2), (2, S, hd))
+    out = flash_attention_tpu(q, k, v, bq=32, bk=32, interpret=True)
+    want = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=3e-5)

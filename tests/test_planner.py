@@ -1,0 +1,146 @@
+"""Planner (paper Alg. 1) tests: DP optimality, memory, heterogeneity."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_arch
+from repro.core.planner import (
+    INF,
+    DeviceProfile,
+    HybridParallelismPlanner,
+    JETSON_NANO_H,
+    JETSON_NANO_L,
+    JETSON_TX2_H,
+    JETSON_TX2_L,
+    LayerCost,
+    brute_force_plan,
+    model_layer_costs,
+    plan_pure_dp,
+    plan_pure_pp,
+)
+
+ENV_A = [JETSON_NANO_H] * 4
+ENV_B = [JETSON_NANO_H, JETSON_NANO_L, JETSON_TX2_H, JETSON_TX2_L]
+
+
+def _costs(tech="pac", arch="t5-base-pac", L=None, seq=128):
+    c = model_layer_costs(get_arch(arch), tech, seq_len=seq)
+    return c[:L] if L else c
+
+
+def test_planner_beats_or_matches_pure_baselines():
+    for tech in ("pac", "full", "lora"):
+        costs = _costs(tech)
+        hp = HybridParallelismPlanner(costs, ENV_A, 4, 4).plan()
+        for base in (plan_pure_dp(costs, ENV_A, 4, 4), plan_pure_pp(costs, ENV_A, 4, 4)):
+            if base is not None:
+                assert hp.minibatch_latency <= base.minibatch_latency + 1e-9
+
+
+def test_full_ft_ooms_on_dp_but_not_hp():
+    """Paper Table V: Standalone/DP OOM for full FT; PP/HP survive."""
+    costs = _costs("full", arch="bart-large-pac")
+    assert plan_pure_dp(costs, ENV_A, 4, 4) is None
+    hp = HybridParallelismPlanner(costs, ENV_A, 4, 4).plan()
+    assert hp.n_stages > 1  # must partition to fit
+
+
+def test_pac_relaxes_memory_pressure():
+    """PAC+ fits with fewer stages than full FT (lighter activations)."""
+    full = HybridParallelismPlanner(_costs("full"), ENV_A, 4, 4).plan()
+    pac = HybridParallelismPlanner(_costs("pac"), ENV_A, 4, 4).plan()
+    assert pac.minibatch_latency < full.minibatch_latency
+
+
+def test_dp_matches_brute_force_small():
+    costs = _costs("full", L=5, seq=64)
+    devs = [JETSON_NANO_H, JETSON_TX2_H, JETSON_NANO_L]
+    dp = HybridParallelismPlanner(costs, devs, 3, 2).plan()
+    bf = brute_force_plan(costs, devs, 3, 2)
+    assert dp.minibatch_latency <= bf.minibatch_latency + 1e-9
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    flops=st.lists(st.floats(1e9, 1e12), min_size=2, max_size=4),
+    L=st.integers(2, 5),
+    seed=st.integers(0, 50),
+)
+def test_dp_optimality_property(flops, L, seed):
+    """Planner DP ≡ brute force over random device pools (hypothesis)."""
+    import random
+
+    rng = random.Random(seed)
+    devs = [
+        DeviceProfile(f"d{i}", f, 8 * 2**30, 125e6) for i, f in enumerate(flops)
+    ]
+    costs = [
+        LayerCost(
+            fwd_flops=rng.uniform(1e9, 5e10),
+            bwd_flops=rng.uniform(1e9, 1e11),
+            param_bytes=rng.uniform(1e6, 1e8),
+            trainable_bytes=1e6,
+            act_bytes=1e6,
+            resident_act_bytes=rng.uniform(1e5, 1e7),
+        )
+        for _ in range(L)
+    ]
+    p = HybridParallelismPlanner(costs, devs, 2, 2)
+    p.plan()
+    # The DP guarantee (paper Eq. 3) is optimal *stage balance* per stage
+    # count s (σ-selection by Eqs. 5-7 is a separate argmin over those
+    # balanced configs). Verify the balance objective against brute force.
+    import itertools
+
+    n, L = len(devs), len(costs)
+    for s in range(1, min(n, L) + 1):
+        w_dp, cfgs = p._w(L - 1, n, s)
+        if cfgs is None:
+            continue
+        best = INF
+        for cuts in itertools.combinations(range(L - 1), s - 1):
+            bounds = [(a + 1, b) for a, b in zip((-1,) + cuts, cuts + (L - 1,))]
+            for dcuts in itertools.combinations(range(1, n), s - 1):
+                dbounds = [(a, b) for a, b in zip((0,) + dcuts, dcuts + (n,))]
+                worst = 0.0
+                for (x, y), (da, db) in zip(bounds, dbounds):
+                    t, _ = p.stage_dispatch(x, y, tuple(range(da, db)), 2)
+                    worst = max(worst, t)
+                best = min(best, worst)
+        assert w_dp <= best + 1e-9
+
+
+def test_infeasible_raises():
+    tiny = [DeviceProfile("t", 1e9, 1 << 20)] * 2  # 1 MB devices
+    costs = _costs("full")
+    with pytest.raises(RuntimeError):
+        HybridParallelismPlanner(costs, tiny, 4, 4).plan()
+
+
+def test_heterogeneity_aware_beats_oblivious():
+    """Paper Fig. 12: het-aware planning ≤ uniform-split planning."""
+    costs = _costs("pac", arch="bart-large-pac")
+    het = HybridParallelismPlanner(costs, ENV_B, 8, 4).plan()
+    obl = HybridParallelismPlanner(costs, ENV_B, 8, 4, heterogeneity_aware=False).plan()
+    assert het.minibatch_latency <= obl.minibatch_latency + 1e-9
+
+
+def test_stage_dispatch_respects_speed_ordering():
+    """Faster devices get ≥ samples of slower ones in one group."""
+    costs = _costs("pac", L=4)
+    pl = HybridParallelismPlanner(costs, [JETSON_NANO_L, JETSON_TX2_H], 8, 2)
+    t, split = pl.stage_dispatch(0, 3, (0, 1), 8)
+    assert split[1] >= split[0]  # tx2-h is ~2.7× faster than nano-l
+
+
+def test_layer_costs_reflect_techniques():
+    """PAC+ backward ≪ LoRA backward ≪ full backward (paper Fig. 13a)."""
+    cfg = get_arch("bart-large-pac")
+    full = sum(c.bwd_flops for c in model_layer_costs(cfg, "full"))
+    lora = sum(c.bwd_flops for c in model_layer_costs(cfg, "lora"))
+    pac = sum(c.bwd_flops for c in model_layer_costs(cfg, "pac"))
+    pac_total = sum(c.fwd_flops + c.bwd_flops for c in model_layer_costs(cfg, "pac"))
+    cached = sum(c.fwd_flops + c.bwd_flops for c in model_layer_costs(cfg, "pac_cached"))
+    assert pac < 0.15 * full  # ~92% backward reduction in the paper
+    assert lora <= full
+    assert cached < 0.2 * pac_total  # cache removes the backbone forward

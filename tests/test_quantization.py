@@ -1,0 +1,95 @@
+"""Quantization unit + property tests (paper §IV-D / Eq. 1-2)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantization import (
+    QTensor,
+    dequantize,
+    maybe_dequantize_tree,
+    quantize,
+    quantize_tree,
+    tree_storage_bytes,
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    rows=st.integers(1, 8),
+    cols=st.integers(1, 300),
+    bits=st.sampled_from([8, 4]),
+    scale=st.floats(1e-3, 1e3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_roundtrip_error_bound(rows, cols, bits, scale, seed):
+    """|x - dequant(quant(x))| ≤ blockwise absmax / qmax / 2 per element."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((rows, cols)) * scale, jnp.float32)
+    qt = quantize(x, bits=bits, block=128)
+    xd = dequantize(qt)
+    assert xd.shape == x.shape
+    qmax = 127 if bits == 8 else 7
+    block = min(128, cols)
+    nb = -(-cols // block)
+    xpad = jnp.pad(x, ((0, 0), (0, nb * block - cols)))
+    absmax = jnp.max(jnp.abs(xpad.reshape(rows, nb, block)), axis=-1)
+    # half-step rounding bound with f32 slack (x·inv rounds in f32)
+    bound = jnp.repeat(absmax / qmax, block, axis=-1)[:, :cols] * 0.5
+    assert jnp.all(jnp.abs(xd - x) <= bound * 1.01 + 1e-5 * (1 + jnp.abs(x)))
+
+
+def test_exact_on_zero_and_extremes():
+    x = jnp.zeros((4, 64))
+    assert jnp.all(dequantize(quantize(x)) == 0)
+    x = jnp.full((2, 128), 3.5)
+    xd = dequantize(quantize(x, bits=8))
+    np.testing.assert_allclose(np.asarray(xd), 3.5, rtol=1e-6)
+
+
+def test_int4_packing_halves_bytes():
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 256))
+    q8 = quantize(x, bits=8)
+    q4 = quantize(x, bits=4)
+    assert q4.q.size == q8.q.size // 2
+    assert q8.nbytes < x.size * 4 / 3.5  # ~4x smaller + scales
+
+
+def test_quantize_tree_skips_small_and_1d():
+    tree = {
+        "big": jax.random.normal(jax.random.PRNGKey(0), (256, 256)),
+        "norm": jnp.ones((256,)),
+        "tiny": jnp.ones((4, 4)),
+    }
+    qt = quantize_tree(tree, bits=8)
+    assert isinstance(qt["big"], QTensor)
+    assert not isinstance(qt["norm"], QTensor)
+    assert not isinstance(qt["tiny"], QTensor)
+    back = maybe_dequantize_tree(qt)
+    assert back["big"].shape == (256, 256)
+    assert tree_storage_bytes(qt) < tree_storage_bytes(tree) / 2
+
+
+def test_memory_footprint_ratio_matches_paper():
+    """INT8 ≈ 4× smaller, INT4 ≈ 8× smaller than FP32 (paper Fig. 15)."""
+    x = jax.random.normal(jax.random.PRNGKey(1), (1024, 1024))
+    f32 = x.size * 4
+    r8 = f32 / quantize(x, bits=8).nbytes
+    r4 = f32 / quantize(x, bits=4).nbytes
+    assert 3.5 < r8 <= 4.0
+    assert 6.5 < r4 <= 8.0
+
+
+def test_dequant_inside_jit_and_grad_flow_blocked():
+    """QTensor dequant works under jit; quantized weights carry no grads."""
+    x = jax.random.normal(jax.random.PRNGKey(2), (8, 128))
+    qt = quantize(jax.random.normal(jax.random.PRNGKey(3), (128, 64)))
+
+    @jax.jit
+    def f(a, q):
+        return jnp.sum(a @ dequantize(q))
+
+    v = f(x, qt)
+    assert jnp.isfinite(v)

@@ -1,0 +1,179 @@
+"""Sharding rules, data pipeline, checkpoint, optimizer units."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.configs import INPUT_SHAPES, get_arch
+from repro.core.quantization import QTensor, quantize_tree
+from repro.data import DataPipeline, SyntheticPersonalCorpus, glue_like_task
+from repro.launch import sharding as shard
+from repro.launch.mesh import make_mesh
+from repro.launch.specs import abstract_params, input_specs, resolve_cfg_for_shape
+from repro.models import backbone as bb
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm, cosine_schedule
+
+
+def _mesh11():
+    return make_mesh((1, 1), ("data", "model"))
+
+
+ASSIGNED = [
+    "musicgen-large", "grok-1-314b", "moonshot-v1-16b-a3b", "kimi-k2-1t-a32b",
+    "qwen2-vl-7b", "xlstm-125m", "gemma2-2b", "jamba-1.5-large-398b",
+    "internlm2-1.8b", "granite-20b",
+]
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_param_specs_cover_all_leaves(arch):
+    cfg = get_arch(arch)
+    mesh = _mesh11()
+    params = abstract_params(cfg)
+    specs = shard.param_specs(params, mesh)
+    n_p = len(jax.tree.leaves(params, is_leaf=lambda x: isinstance(x, QTensor)))
+    n_s = len(jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, (P, QTensor))))
+    assert n_p == n_s
+    for leaf, spec in zip(
+        jax.tree.leaves(params, is_leaf=lambda x: isinstance(x, QTensor)),
+        jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, (P, QTensor))),
+    ):
+        if isinstance(leaf, QTensor):
+            assert isinstance(spec, QTensor)
+        else:
+            assert len(spec) <= leaf.ndim
+
+
+@pytest.mark.parametrize("arch", ["kimi-k2-1t-a32b", "granite-20b"])
+def test_quantized_param_specs(arch):
+    cfg = get_arch(arch)
+    mesh = _mesh11()
+    params = abstract_params(cfg, quant_bits=8)
+    specs = shard.param_specs(params, mesh)
+    qleaves = [
+        l for l in jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, QTensor))
+        if isinstance(l, QTensor)
+    ]
+    assert qleaves, "quantized params must produce QTensor specs"
+
+
+@pytest.mark.parametrize("shape_name", list(INPUT_SHAPES))
+@pytest.mark.parametrize("arch", ["internlm2-1.8b", "qwen2-vl-7b", "musicgen-large"])
+def test_input_specs_shapes(arch, shape_name):
+    cfg = get_arch(arch)
+    shape = INPUT_SHAPES[shape_name]
+    cfg2, note = resolve_cfg_for_shape(cfg, shape)
+    batch = input_specs(cfg2, shape)
+    B = shape.global_batch
+    if cfg.frontend:
+        assert batch["embeds"].shape[0] == B
+        assert batch["embeds"].shape[2] == cfg.d_model
+    else:
+        assert batch["tokens"].shape[0] == B
+    if shape.mode == "decode":
+        lead = batch.get("tokens", batch.get("embeds"))
+        assert lead.shape[1] == 1  # ONE new token
+    if shape.name == "long_500k" and not cfg.is_subquadratic():
+        assert note == "sw8k" and cfg2.is_subquadratic()
+
+
+def test_corpus_learnable_structure_and_determinism():
+    c1 = SyntheticPersonalCorpus(128, 16, 32, seed=7)
+    c2 = SyntheticPersonalCorpus(128, 16, 32, seed=7)
+    np.testing.assert_array_equal(c1.tokens, c2.tokens)
+    b = c1.batch(np.arange(4))
+    assert b["tokens"].shape == (4, 15) and b["labels"].shape == (4, 15)
+    # labels are next tokens
+    np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+
+
+def test_pipeline_epochs_shuffle_and_microbatch():
+    corpus = glue_like_task("mrpc", 128, 16, scale=0.01)
+    pipe = DataPipeline(corpus, global_batch=8, seed=3)
+    e0 = [b["seq_ids"] for b in pipe.epoch(0)]
+    e1 = [b["seq_ids"] for b in pipe.epoch(1)]
+    assert not all(np.array_equal(a, b) for a, b in zip(e0, e1))
+    mb = DataPipeline.microbatches(corpus.batch(np.arange(8)), 4)
+    assert mb["tokens"].shape[:2] == (4, 2)
+
+
+def test_checkpoint_roundtrip_nested(tmp_path):
+    tree = {
+        "a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+        "nested": {"b": [jnp.ones((4,)), jnp.zeros((2, 2), jnp.int32)]},
+        "q": quantize_tree({"w": jax.random.normal(jax.random.PRNGKey(0), (128, 128))})["w"],
+        "scalar": 3,
+        "s": "hello",
+    }
+    p = str(tmp_path / "t.msgpack")
+    n = save_checkpoint(p, tree)
+    assert n > 0
+    back = load_checkpoint(p)
+    np.testing.assert_array_equal(np.asarray(back["a"]), np.asarray(tree["a"]))
+    assert isinstance(back["q"], QTensor)
+    np.testing.assert_array_equal(np.asarray(back["q"].q), np.asarray(tree["q"].q))
+    assert back["scalar"] == 3 and back["s"] == "hello"
+
+
+def test_adamw_descends_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = adamw_init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state = adamw_update(params, grads, state, lr=5e-2, weight_decay=0.0)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.15
+
+
+def test_clip_and_schedule():
+    g, norm = clip_by_global_norm({"a": jnp.full((4,), 10.0)}, 1.0)
+    assert float(jnp.sqrt(jnp.sum(jnp.square(g["a"])))) <= 1.0 + 1e-5
+    lrs = [float(cosine_schedule(s, 100, 1.0, warmup_steps=10)) for s in range(100)]
+    assert lrs[0] < lrs[9] and lrs[20] > lrs[90]
+
+
+# ---------------------------------------------------------------------------
+# psharding rule-table units (TP_ALT fallback, stacked-vs-slice lookup)
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_tp_alt_fallback_fires_only_when_tp_fails():
+    from jax.sharding import AbstractMesh
+    from repro.core.psharding import FSDP, TP, TP_ALT, resolve
+
+    mesh = AbstractMesh((2, 2), ("data", "model"))
+    # E=8 divides model=2 -> TP wins, TP_ALT stays None
+    spec = resolve((None, TP, FSDP, TP_ALT), (4, 8, 16, 32), mesh)
+    assert spec == P(None, "model", "data", None)
+    # E=3 does not divide -> TP_ALT takes the model axis (grok case)
+    spec = resolve((None, TP, FSDP, TP_ALT), (4, 3, 16, 32), mesh)
+    assert spec == P(None, None, "data", "model")
+    # neither divides -> nothing gets model
+    spec = resolve((None, TP, FSDP, TP_ALT), (4, 3, 16, 33), mesh)
+    assert spec == P(None, None, "data", None)
+
+
+def test_constrain_spec_is_noop_without_mesh():
+    from repro.core.psharding import constrain_spec
+
+    x = jnp.ones((4, 8, 16))
+    y = constrain_spec(x, ("batch", "model", None))
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_slice_lookup_uses_stacked_rules():
+    """The scan slice of stacked MoE weights (E,d,f) must keep E on the
+    model axis (hillclimb kimi iter A): the rule lookup for a sliced leaf
+    goes through the stacked (ndim+1) table minus the scan dim."""
+    from repro.core.psharding import TP, TP_ALT, logical_for_param
+
+    # sliced MoE expert weight (E, d, f): stacked rule is (None, TP, FSDP, TP_ALT)
+    logical = logical_for_param(["blocks", "ffn", "wi"], 3 + 1)[1:]
+    kept = tuple(ax if ax in (TP, TP_ALT) else None for ax in logical)
+    assert kept == (TP, None, TP_ALT)
+    # sliced attention weight (d, H*hd): stacked rule (None, FSDP, TP)
+    logical = logical_for_param(["blocks", "mixer", "wq"], 2 + 1)[1:]
+    kept = tuple(ax if ax in (TP, TP_ALT) else None for ax in logical)
+    assert kept == (None, TP)

@@ -1,0 +1,133 @@
+"""End-to-end system behaviour: the full PAC+ workflow (paper Fig. 4).
+
+Step 1-2: quantize backbone + build/initialise Parallel Adapters;
+Step 3-4: profile + plan; Step 5: epoch-1 hybrid training; Step 6:
+epoch≥2 cache-hit training. Asserts: loss ↓, cache hit path ≡ recompute,
+checkpoint round-trip.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.configs import get_arch
+from repro.core import steps
+from repro.core.activation_cache import ActivationCache
+from repro.core.init_methods import pruning_init
+from repro.core.planner import (
+    HybridParallelismPlanner,
+    JETSON_NANO_H,
+    model_layer_costs,
+)
+from repro.core.quantization import quantize_tree
+from repro.data import DataPipeline, SyntheticPersonalCorpus
+from repro.models import backbone as bb
+from repro.optim import adamw_init
+
+
+def test_full_pac_workflow(tmp_path):
+    cfg = get_arch("internlm2-1.8b").reduced()
+    B, S, EPOCHS = 4, 24, 3
+
+    # Step 1-2: pre-process — quantize backbone, pruning-init adapters
+    bp = bb.init_backbone(jax.random.PRNGKey(0), cfg)
+    bq = quantize_tree(bp, bits=8, min_size=1024)
+    ap = pruning_init(jax.random.PRNGKey(1), bp, cfg, r=4)
+    opt = adamw_init(ap)
+
+    # Step 3-4: profile + plan (analytic profile at this scale)
+    costs = model_layer_costs(cfg, "pac", seq_len=S)
+    plan = HybridParallelismPlanner(costs, [JETSON_NANO_H] * 4, B, 2).plan()
+    assert plan.minibatch_latency > 0
+
+    corpus = SyntheticPersonalCorpus(cfg.vocab, S + 1, 16, seed=0)
+    pipe = DataPipeline(corpus, global_batch=B, shuffle=True)
+    cache = ActivationCache(budget_bytes=1 << 30)
+    final_cache = {}
+
+    step1 = jax.jit(functools.partial(steps.pac_train_step, cfg=cfg, r=4))
+    stepN = jax.jit(functools.partial(steps.pac_cached_train_step, cfg=cfg, r=4))
+
+    losses = []
+    for epoch in range(EPOCHS):
+        ep_losses = []
+        for batch in pipe.epoch(0):  # fixed order: cache keys must match
+            ids = batch.pop("seq_ids")
+            hit = cache.get_batch(ids)
+            if hit is None:
+                # Step 5: epoch-1 — backbone forward + adapter update
+                loss, ap, opt, (b0, taps, bf) = step1(bq, ap, opt, batch)
+                cache.put_batch(ids, b0, taps)
+                for i, k in enumerate(ids):
+                    final_cache[int(k)] = np.asarray(bf)[i]
+            else:
+                # Step 6: epoch≥2 — activation-cache hit, adapter-only
+                b0, taps = hit
+                bfh = np.stack([final_cache[int(k)] for k in ids])
+                cached = {
+                    "b0": jnp.asarray(b0),
+                    "taps": jnp.asarray(taps),
+                    "b_final": jnp.asarray(bfh),
+                    "labels": batch["labels"],
+                }
+                loss, ap, opt = stepN(bq, ap, opt, cached)
+            ep_losses.append(float(loss))
+        losses.append(float(np.mean(ep_losses)))
+
+    assert cache.hits > 0 and cache.misses > 0
+    assert losses[-1] < losses[0], f"no learning: {losses}"
+
+    # checkpoint round-trip (quantized backbone + adapters)
+    path = str(tmp_path / "ckpt.msgpack")
+    save_checkpoint(path, {"backbone": bq, "adapter": ap})
+    loaded = load_checkpoint(path)
+    for a, b in zip(jax.tree.leaves(loaded["adapter"]), jax.tree.leaves(ap)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_serve_finetuned_model():
+    """pac_decode_step: serving the personalised model token-by-token."""
+    cfg = get_arch("internlm2-1.8b").reduced()
+    bp = bb.init_backbone(jax.random.PRNGKey(0), cfg)
+    from repro.core.parallel_adapters import init_adapter, init_adapter_cache
+
+    ap = init_adapter(jax.random.PRNGKey(1), cfg, r=4)
+    B, S = 2, 8
+    cache = bb.init_cache(cfg, B, S)
+    acache = init_adapter_cache(cfg, B, S, r=4)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    for t in range(4):
+        logits, cache, acache = steps.pac_decode_step(
+            bp, ap, {"tokens": tok}, cache, acache, jnp.int32(t), cfg=cfg, r=4
+        )
+        assert logits.shape == (B, 1, cfg.vocab)
+        assert np.isfinite(np.asarray(logits)).all()
+        tok = jnp.argmax(logits[:, :, :], axis=-1).astype(jnp.int32)
+
+
+def test_activation_cache_disk_spill_roundtrip(tmp_path):
+    """§V-B storage-cost path: over-budget entries spill to disk and read
+    back bit-exact; RAM usage stays within budget."""
+    import numpy as np
+
+    from repro.core.activation_cache import ActivationCache
+
+    S, d, n_p = 16, 8, 3
+    one = S * d * 4 + n_p * S * d * 4  # bytes per entry
+    cache = ActivationCache(budget_bytes=2 * one + 1, spill_dir=str(tmp_path))
+    entries = {}
+    for k in range(6):
+        b0 = np.random.RandomState(k).randn(S, d).astype(np.float32)
+        taps = np.random.RandomState(100 + k).randn(n_p, S, d).astype(np.float32)
+        cache.put(k, b0, taps)
+        entries[k] = (b0, taps)
+    assert len(cache) == 6
+    assert cache.nbytes <= 2 * one + 1  # RAM stayed within budget
+    assert len(list(tmp_path.iterdir())) >= 4  # the rest spilled
+    for k, (b0, taps) in entries.items():
+        got_b0, got_taps = cache.get(k)
+        np.testing.assert_array_equal(got_b0, b0)
+        np.testing.assert_array_equal(got_taps, taps)
