@@ -10,6 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import row
+from repro.compat import tree_map
 from repro.configs import get_arch
 from repro.core import steps
 from repro.core.init_methods import distillation_init, pruning_init
@@ -63,7 +64,7 @@ def main(arch="internlm2-1.8b") -> list:
         key = jax.random.PRNGKey(10 + seed)
         inits = {
             "gaussian": init_adapter(key, cfg, r=4),
-            "zero": jax.tree.map(jnp.zeros_like, init_adapter(key, cfg, r=4)),
+            "zero": tree_map(jnp.zeros_like, init_adapter(key, cfg, r=4)),
             "pruning": pruning_init(key, bp, cfg, r=4),
             "distill": distillation_init(key, bp, cfg, train[:2], r=4, steps=10),
         }

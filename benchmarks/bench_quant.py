@@ -10,6 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import row
+from repro.compat import tree_map
 from repro.configs import get_arch
 from repro.core import steps
 from repro.core.init_methods import pruning_init
@@ -36,7 +37,7 @@ def main(arch="internlm2-1.8b") -> list:
             bq = bp
         elif precision == "bf16":
             # paper Table VII's FP16 row; bf16 is the TPU-native half type
-            bq = jax.tree.map(
+            bq = tree_map(
                 lambda t: t.astype(jnp.bfloat16) if t.dtype == jnp.float32 else t, bp
             )
         else:

@@ -9,6 +9,8 @@ import sys
 import time
 import traceback
 
+from repro.compat import enable_compilation_cache
+
 BENCHES = [
     ("fig3_flops", "benchmarks.bench_flops"),
     ("table1_memory", "benchmarks.bench_memory"),
@@ -28,6 +30,9 @@ def main() -> None:
     ap.add_argument("--only", default=None, help="comma-separated bench name prefixes")
     args = ap.parse_args()
     only = args.only.split(",") if args.only else None
+
+    # reruns of the same bench matrix hit the persistent compile cache
+    enable_compilation_cache()
 
     failures = []
     print("name,us_per_call,derived")

@@ -8,7 +8,7 @@ from the cache (pure data parallelism — paper Fig. 11).
 Storage cost is ``(n_periods + 1) · S · d`` values per sequence (paper's
 ``s × h × l`` analysis). The manager enforces a byte budget and spills to
 disk (the paper reloads per micro-batch from embedded flash; here we
-mmap ``.npy`` shards so reloads are zero-copy reads).
+reload ``.npz`` shards, closing each archive handle after the read).
 """
 
 from __future__ import annotations
@@ -59,6 +59,12 @@ class ActivationCache:
         b0 = np.asarray(b0, self.dtype)
         taps = np.asarray(taps, self.dtype)
         size = b0.nbytes + taps.nbytes
+        # re-putting an existing key replaces it: retire the old entry's
+        # bytes first, or the budget check double-counts and triggers
+        # spurious evictions/spills
+        if key in self._ram:
+            a, b = self._ram.pop(key)
+            self._ram_bytes -= a.nbytes + b.nbytes
         if self._ram_bytes + size > self.budget_bytes and self.spill_dir:
             self._spill(key, b0, taps)
             return
@@ -69,6 +75,12 @@ class ActivationCache:
                 k, (a, b) = next(iter(self._ram.items()))
                 self._ram_bytes -= a.nbytes + b.nbytes
                 del self._ram[k]
+        if key in self._disk:  # entry moves to RAM — drop the stale spill
+            path = self._disk.pop(key)
+            try:
+                os.remove(path)
+            except OSError:
+                pass
         self._ram[key] = (b0, taps)
         self._ram_bytes += size
 
@@ -84,8 +96,10 @@ class ActivationCache:
             return self._ram[key]
         if key in self._disk:
             self.hits += 1
-            z = np.load(self._disk[key], mmap_mode="r")
-            return z["b0"], z["taps"]
+            # npz archives cannot be mmapped; close the zip handle rather
+            # than leaking one file descriptor per disk hit
+            with np.load(self._disk[key]) as z:
+                return z["b0"], z["taps"]
         self.misses += 1
         return None
 

@@ -28,7 +28,8 @@ from typing import Callable, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax.experimental.shard_map import shard_map
+
+from repro.compat import shard_map
 
 # ---------------------------------------------------------------------------
 # 1F1B schedule

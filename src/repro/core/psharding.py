@@ -24,6 +24,8 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 from jax.tree_util import DictKey, SequenceKey
 
+from repro import compat
+
 FSDP = "fsdp"
 TP = "tp"
 # Fallback tensor-parallel axis: gets `model` only if every TP dim in the
@@ -143,21 +145,7 @@ def resolve(logical, shape, mesh) -> P:
 
 def ambient_mesh():
     """The mesh from the enclosing ``with mesh:`` / set_mesh context."""
-    try:
-        m = jax.sharding.get_abstract_mesh()
-        if m is not None and not m.empty:
-            return m
-    except Exception:
-        pass
-    try:
-        from jax._src import mesh as mesh_lib
-
-        m = mesh_lib.thread_resources.env.physical_mesh
-        if m is not None and not m.empty:
-            return m
-    except Exception:
-        pass
-    return None
+    return compat.ambient_mesh()
 
 
 def _mesh_has_model_axis() -> bool:
@@ -275,4 +263,4 @@ def gather_for_compute(block_params, mesh=None):
         spec = resolve(logical, leaf.shape, mesh)
         return jax.lax.with_sharding_constraint(leaf, spec)
 
-    return jax.tree_util.tree_map_with_path(constrain, block_params)
+    return compat.tree_map_with_path(constrain, block_params)

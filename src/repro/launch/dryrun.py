@@ -1,12 +1,13 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.compat import force_host_device_count
+force_host_device_count(512)
 
 """Multi-pod dry-run: lower + compile every (arch × input shape) on the
 production meshes, and emit the roofline terms.
 
 The two lines above MUST stay the first statements in this module — jax
-locks the device count at first initialisation, and the 512 placeholder
-host devices exist only for this entry point (tests/benches see 1).
+locks the device count at first *backend initialisation*, and the 512
+placeholder host devices exist only for this entry point (tests/benches
+see 1).
 
 Usage:
     PYTHONPATH=src python -m repro.launch.dryrun --arch internlm2-1.8b --shape train_4k
@@ -14,6 +15,7 @@ Usage:
 """
 
 import argparse
+import os
 import json
 import time
 import traceback

@@ -16,11 +16,10 @@ from __future__ import annotations
 
 from typing import Any, Optional, Tuple
 
-import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax.tree_util import DictKey, SequenceKey
 
+from repro import compat
 from repro.core.psharding import (
     FSDP,
     TP,
@@ -49,7 +48,7 @@ def param_specs(params, mesh: Mesh):
             return QTensor(q_spec, s_spec, leaf.bits, leaf.block, leaf.orig_last)
         return _presolve(_logical_for_param(names, leaf.ndim), leaf.shape, mesh)
 
-    return jax.tree_util.tree_map_with_path(
+    return compat.tree_map_with_path(
         spec_for, params, is_leaf=lambda x: isinstance(x, QTensor)
     )
 
@@ -77,7 +76,7 @@ def batch_specs(batch, mesh: Mesh, shard_batch: bool = True):
             return P(None, B_axis, sq, None)
         return P(*((None,) * leaf.ndim))
 
-    return jax.tree_util.tree_map_with_path(spec_for, batch)
+    return compat.tree_map_with_path(spec_for, batch)
 
 
 def cache_specs(cache, mesh: Mesh, B: int):
@@ -118,7 +117,7 @@ def cache_specs(cache, mesh: Mesh, B: int):
             *((None,) * leaf.ndim)
         )
 
-    return jax.tree_util.tree_map_with_path(spec_for, cache)
+    return compat.tree_map_with_path(spec_for, cache)
 
 
 def to_named(tree_specs, mesh: Mesh):
@@ -132,4 +131,4 @@ def to_named(tree_specs, mesh: Mesh):
             return QTensor(f(leaf.q), f(leaf.scale), leaf.bits, leaf.block, leaf.orig_last)
         return f(leaf)
 
-    return jax.tree.map(g, tree_specs, is_leaf=lambda x: isinstance(x, (P, QTensor)))
+    return compat.tree_map(g, tree_specs, is_leaf=lambda x: isinstance(x, (P, QTensor)))

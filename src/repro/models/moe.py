@@ -31,6 +31,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.core.psharding import ambient_mesh, constrain_spec, n_data_shards
 
 
@@ -58,9 +59,9 @@ def _local_topk(x, k, axes):
     from jax.sharding import PartitionSpec as P
 
     pspec = P(*spec)
-    return jax.shard_map(
+    return compat.shard_map(
         lambda v: tuple(jax.lax.top_k(v, k)),
-        mesh=mesh, in_specs=pspec, out_specs=(pspec, pspec), check_vma=False,
+        mesh=mesh, in_specs=pspec, out_specs=(pspec, pspec), check_rep=False,
     )(x)
 
 

@@ -1,0 +1,141 @@
+"""Hypothesis-optional property-testing shim.
+
+Test modules import ``given``/``settings``/``strategies`` from here
+instead of from ``hypothesis`` directly. When hypothesis is installed it
+is used verbatim (shrinking, the example database, all of it). When it
+is not — stock edge images rarely ship it — a minimal vendored fallback
+runs each property over ``max_examples`` pseudo-random samples drawn
+from a per-test deterministic seed, so failures reproduce across runs
+and machines.
+
+The fallback implements exactly the strategy surface this repo uses:
+``integers``, ``floats``, ``booleans``, ``sampled_from``, ``lists``,
+``tuples``, ``just``, plus ``.map``/``.filter``. Add here before using a
+new strategy in a test.
+"""
+
+from __future__ import annotations
+
+try:  # real hypothesis when available
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import random
+    import zlib
+
+    _DEFAULT_MAX_EXAMPLES = 20
+    _FILTER_RETRIES = 1000
+
+    class _Strategy:
+        """A sampler: ``draw(rng) -> value``."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+        def map(self, f):
+            return _Strategy(lambda rng: f(self._draw(rng)))
+
+        def filter(self, pred):
+            def draw(rng):
+                for _ in range(_FILTER_RETRIES):
+                    v = self._draw(rng)
+                    if pred(v):
+                        return v
+                raise RuntimeError("propcheck: filter predicate never satisfied")
+
+            return _Strategy(draw)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return [elements.draw(rng) for _ in range(n)]
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def tuples(*strats):
+            return _Strategy(lambda rng: tuple(s.draw(rng) for s in strats))
+
+        @staticmethod
+        def just(value):
+            return _Strategy(lambda rng: value)
+
+    strategies = _Strategies()
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, **_ignored):
+        """Accepts (and ignores) hypothesis-only knobs like ``deadline``."""
+
+        def deco(fn):
+            fn._propcheck_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strats):
+        """Keyword-strategies decorator; runs the test over N samples.
+
+        The RNG seed is derived from the test's qualified name, so every
+        run (and every machine) replays the same examples — no flaky
+        property tests, and a failing sample stays failing while it is
+        being fixed.
+        """
+        if not strats:
+            raise TypeError("propcheck given() requires keyword strategies")
+
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(
+                    wrapper,
+                    "_propcheck_max_examples",
+                    getattr(fn, "_propcheck_max_examples", _DEFAULT_MAX_EXAMPLES),
+                )
+                seed = zlib.crc32(f"{fn.__module__}.{fn.__qualname__}".encode())
+                rng = random.Random(seed)
+                for i in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strats.items()}
+                    try:
+                        fn(*args, **drawn, **kwargs)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"propcheck: falsifying example {i + 1}/{n} "
+                            f"for {fn.__qualname__}: {drawn!r}"
+                        ) from e
+
+            # hide the strategy kwargs from pytest's fixture resolution
+            # (functools.wraps exposes fn's signature via __wrapped__)
+            sig = inspect.signature(fn)
+            kept = [p for n, p in sig.parameters.items() if n not in strats]
+            wrapper.__signature__ = sig.replace(parameters=kept)
+            del wrapper.__wrapped__
+            return wrapper
+
+        return deco

@@ -1,0 +1,116 @@
+"""Regression tests for ActivationCache byte accounting and fd hygiene."""
+
+import numpy as np
+import pytest
+
+from repro.core.activation_cache import ActivationCache
+
+
+def _entry(seed, S=8, d=4, n_p=2):
+    b0 = np.random.RandomState(seed).randn(S, d).astype(np.float32)
+    taps = np.random.RandomState(100 + seed).randn(n_p, S, d).astype(np.float32)
+    return b0, taps
+
+
+def _entry_bytes(S=8, d=4, n_p=2):
+    return S * d * 4 + n_p * S * d * 4
+
+
+def test_reput_same_key_does_not_inflate_ram_bytes():
+    """Re-putting an existing key replaces it — bytes must not accumulate."""
+    cache = ActivationCache(budget_bytes=1 << 20)
+    b0, taps = _entry(0)
+    for _ in range(5):
+        cache.put(1, b0, taps)
+    assert len(cache) == 1
+    assert cache.nbytes == _entry_bytes()
+
+
+def test_reput_does_not_trigger_spurious_eviction():
+    """Epoch-style overwrite of every key must not evict anything: the
+    replaced entry's bytes are retired before the budget check."""
+    one = _entry_bytes()
+    cache = ActivationCache(budget_bytes=3 * one)
+    entries = {k: _entry(k) for k in range(3)}
+    for rounds in range(3):  # 3 epochs of identical puts, exactly at budget
+        for k, (b0, taps) in entries.items():
+            cache.put(k, b0, taps)
+        assert len(cache) == 3
+        assert cache.nbytes == 3 * one
+    for k, (b0, taps) in entries.items():
+        got = cache.get(k)
+        np.testing.assert_array_equal(got[0], b0)
+        np.testing.assert_array_equal(got[1], taps)
+
+
+def test_reput_updates_accounting_for_new_size():
+    cache = ActivationCache(budget_bytes=1 << 20)
+    cache.put(7, *_entry(0, S=8))
+    cache.put(7, *_entry(1, S=16))  # replace with a bigger entry
+    assert cache.nbytes == _entry_bytes(S=16)
+    cache.put(7, *_entry(2, S=4))  # and a smaller one
+    assert cache.nbytes == _entry_bytes(S=4)
+
+
+def test_reput_of_spilled_key_drops_stale_disk_entry(tmp_path):
+    """A key that spilled to disk and is later re-put into RAM must not be
+    double-counted by len() nor leave an orphan spill file."""
+    one = _entry_bytes()
+    cache = ActivationCache(budget_bytes=one + 1, spill_dir=str(tmp_path))
+    cache.put(0, *_entry(0))
+    cache.put(1, *_entry(1))  # over budget -> spills to disk
+    assert len(cache) == 2
+    assert len(list(tmp_path.iterdir())) == 1
+    # shrink both entries so they fit in RAM: the spilled key must move
+    # back, deleting its stale spill file
+    cache.put(0, *_entry(2, S=1))
+    cache.put(1, *_entry(3, S=1))
+    assert len(cache) == 2
+    assert cache.nbytes == 2 * _entry_bytes(S=1)
+    assert list(tmp_path.iterdir()) == []
+
+
+def test_disk_get_closes_npz_handle(tmp_path, monkeypatch):
+    """The disk path of get() must close the npz archive it opens.
+
+    Tracked per-instance via a wrapped np.load (patching NpzFile.close
+    on the class segfaults numpy's __del__ during monkeypatch undo).
+    """
+    closed = []
+    opened = []
+    real_load = np.load
+
+    def tracking_load(*args, **kwargs):
+        z = real_load(*args, **kwargs)
+        real_close = z.close
+        def close_once():
+            if z not in closed:
+                closed.append(z)
+            real_close()
+        z.close = close_once  # instance attr shadows the method
+        opened.append(z)
+        return z
+
+    monkeypatch.setattr(np, "load", tracking_load)
+    cache = ActivationCache(budget_bytes=1, spill_dir=str(tmp_path))
+    b0, taps = _entry(3)
+    cache.put(5, b0, taps)  # budget 1 byte -> straight to disk
+    got_b0, got_taps = cache.get(5)
+    np.testing.assert_array_equal(got_b0, b0)
+    np.testing.assert_array_equal(got_taps, taps)
+    assert opened, "disk get should have gone through np.load"
+    assert closed == opened, "get() must close the npz archive it opened"
+    for z in opened:  # break the z -> close_once -> z ref cycle
+        del z.close
+
+
+def test_disk_hit_survives_spill_file_rewrite(tmp_path):
+    """Repeated spills of the same key overwrite in place (no dup files)."""
+    cache = ActivationCache(budget_bytes=1, spill_dir=str(tmp_path))
+    cache.put(9, *_entry(0))
+    b0, taps = _entry(4)
+    cache.put(9, b0, taps)
+    assert len(list(tmp_path.iterdir())) == 1
+    got = cache.get(9)
+    np.testing.assert_array_equal(got[0], b0)
+    np.testing.assert_array_equal(got[1], taps)

@@ -11,7 +11,7 @@ import sys
 import textwrap
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
 from repro.core.pipeline import build_1f1b_schedule, simulate_plan, validate_schedule
 from repro.core.planner import (
@@ -150,7 +150,10 @@ _SUBPROCESS_DP = textwrap.dedent(
         float(jnp.max(jnp.abs(a - b)))
         for a, b in zip(jax.tree.leaves(ap_ref), jax.tree.leaves(ap_sh))
     )
-    assert d < 1e-4, d
+    # f32 reduction order differs across shards; AdamW's m/(sqrt(v)+eps)
+    # amplifies that near zero-gradient elements, so the post-update bound
+    # is looser than the loss bound (real sharding bugs are O(1) off)
+    assert d < 1e-3, d
     print("SPMD_STEP_OK")
     """
 )

@@ -1,7 +1,7 @@
 """Planner (paper Alg. 1) tests: DP optimality, memory, heterogeneity."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
 from repro.configs import get_arch
 from repro.core.planner import (

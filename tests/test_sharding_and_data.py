@@ -140,10 +140,10 @@ def test_clip_and_schedule():
 
 
 def test_resolve_tp_alt_fallback_fires_only_when_tp_fails():
-    from jax.sharding import AbstractMesh
+    from repro.compat import abstract_mesh
     from repro.core.psharding import FSDP, TP, TP_ALT, resolve
 
-    mesh = AbstractMesh((2, 2), ("data", "model"))
+    mesh = abstract_mesh((2, 2), ("data", "model"))
     # E=8 divides model=2 -> TP wins, TP_ALT stays None
     spec = resolve((None, TP, FSDP, TP_ALT), (4, 8, 16, 32), mesh)
     assert spec == P(None, "model", "data", None)
