@@ -3,6 +3,12 @@
 Measured wall-time on the reduced model (CPU): the paper's claim is
 relative (PAC+ cuts per-sample time 32–56% vs baselines without cache,
 up to 96% with cache) — we check the same ratios.
+
+``--dp N --stages S`` switches to the distributed mode (Fig. 10/11): the
+hybrid DP×PP epoch-1 step and the pure-DP cached step are timed on an
+emulated (dp, stage) host-device mesh against the single-device step.
+Run as ``python -m benchmarks.bench_step_time --dp 2 --stages 2`` (own
+process: the device count locks at backend init).
 """
 
 import functools
@@ -63,5 +69,65 @@ def main(arch="t5-base-pac") -> list:
     return out
 
 
+def main_distributed(arch="internlm2-1.8b", dp=2, stages=2, n_micro=None, B=8, S=64) -> list:
+    """Hybrid DP×PP step time vs single device (requires dp·stages devices;
+    call ``compat.force_host_device_count`` before any JAX compute)."""
+    from repro.launch.mesh import make_edge_mesh
+
+    n_micro = n_micro or stages
+    cfg = get_arch(arch).reduced()
+    mesh = make_edge_mesh(dp, stages)
+    bp = bb.init_backbone(jax.random.PRNGKey(0), cfg)
+    ap = init_adapter(jax.random.PRNGKey(3), cfg, r=8)
+    batch = make_batch(cfg, B, S)
+    out = []
+
+    t_pac = timeit(
+        jax.jit(functools.partial(steps.pac_train_step, cfg=cfg, r=8)),
+        bp, ap, adamw_init(ap), batch,
+    )
+    t_pipe = timeit(
+        jax.jit(functools.partial(
+            steps.pipeline_pac_train_step, cfg=cfg, mesh=mesh, n_micro=n_micro, r=8)),
+        bp, ap, adamw_init(ap), batch,
+    )
+    _, _, _, (b0, taps, bf) = steps.pac_train_step(bp, ap, adamw_init(ap), batch, cfg=cfg, r=8)
+    cached = {"b0": b0, "taps": taps, "b_final": bf, "labels": batch["labels"]}
+    from repro.launch import sharding as shard
+
+    import jax.numpy as jnp
+    import numpy as np
+
+    cached = {k: jnp.asarray(np.asarray(v)) for k, v in cached.items()}
+    t_cached_dp = timeit(
+        jax.jit(functools.partial(steps.pac_cached_train_step, cfg=cfg, r=8),
+                in_shardings=shard.cached_step_shardings(
+                    bp, ap, adamw_init(ap), cached, mesh)),
+        bp, ap, adamw_init(ap), cached,
+    )
+    for name, t in [("pac_1dev", t_pac), (f"pac_hybrid_dp{dp}xpp{stages}", t_pipe),
+                    (f"pac_cached_dp{dp}", t_cached_dp)]:
+        out.append(row(
+            f"fig10_dist_step_time_{name}", t * 1e6 / B,
+            f"per_sample_ms={t*1e3/B:.2f};n_micro={n_micro}",
+        ))
+    return out
+
+
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", default=None,
+                   help="default: t5-base-pac (single device) / internlm2-1.8b (distributed)")
+    p.add_argument("--dp", type=int, default=1)
+    p.add_argument("--stages", type=int, default=1)
+    p.add_argument("--micro", type=int, default=None)
+    a = p.parse_args()
+    if a.dp * a.stages > 1:
+        from repro.compat import force_host_device_count
+
+        force_host_device_count(a.dp * a.stages)
+        main_distributed(a.arch or "internlm2-1.8b", a.dp, a.stages, a.micro)
+    else:
+        main(a.arch or "t5-base-pac")

@@ -49,7 +49,8 @@ class ActivationCache:
         return key in self._ram or key in self._disk
 
     def __len__(self) -> int:
-        return len(self._ram) + len(self._disk)
+        # a promoted entry keeps its (clean) disk copy — count keys once
+        return len(self._ram.keys() | self._disk.keys())
 
     @property
     def nbytes(self) -> int:
@@ -65,17 +66,23 @@ class ActivationCache:
         if key in self._ram:
             a, b = self._ram.pop(key)
             self._ram_bytes -= a.nbytes + b.nbytes
-        if self._ram_bytes + size > self.budget_bytes and self.spill_dir:
-            self._spill(key, b0, taps)
+        if size > self.budget_bytes:
+            # the entry alone exceeds the whole budget — don't flush the
+            # hot working set making room that can't suffice: disk is its
+            # home, or without a spill_dir it is dropped (one sequence
+            # re-forwards later, instead of the whole RAM set)
+            if self.spill_dir:
+                self._spill(key, b0, taps)
             return
-        if self._ram_bytes + size > self.budget_bytes:
-            # evict oldest RAM entries to disk-less drop (paper clears cache
-            # post-training; mid-training eviction means a re-forward later)
-            while self._ram and self._ram_bytes + size > self.budget_bytes:
-                k, (a, b) = next(iter(self._ram.items()))
-                self._ram_bytes -= a.nbytes + b.nbytes
-                del self._ram[k]
-        if key in self._disk:  # entry moves to RAM — drop the stale spill
+        # LRU eviction: the *oldest* RAM entries move to disk, the new
+        # entry stays RAM-resident — so under budget pressure the hot
+        # (recently written/read) working set keeps serving from RAM
+        # instead of freezing the earliest sequences there and routing
+        # all later traffic through npz round-trips. Without a spill_dir
+        # evicted entries are dropped (paper clears the cache
+        # post-training; a mid-training drop means a re-forward later).
+        self._evict_until(self.budget_bytes - size)
+        if key in self._disk:  # new *data* for the key — the spill is stale
             path = self._disk.pop(key)
             try:
                 os.remove(path)
@@ -83,6 +90,17 @@ class ActivationCache:
                 pass
         self._ram[key] = (b0, taps)
         self._ram_bytes += size
+
+    def _evict_until(self, target_bytes: int) -> None:
+        """Evict oldest RAM entries until ``_ram_bytes <= target_bytes``.
+        A victim with a clean disk copy (promoted earlier) is dropped for
+        free; otherwise it is spilled (or dropped without a spill_dir)."""
+        while self._ram and self._ram_bytes > target_bytes:
+            k, (a, b) = next(iter(self._ram.items()))
+            self._ram_bytes -= a.nbytes + b.nbytes
+            del self._ram[k]
+            if self.spill_dir and k not in self._disk:
+                self._spill(k, a, b)
 
     def _spill(self, key: int, b0: np.ndarray, taps: np.ndarray) -> None:
         os.makedirs(self.spill_dir, exist_ok=True)
@@ -93,13 +111,27 @@ class ActivationCache:
     def get(self, key: int) -> Optional[Tuple[np.ndarray, np.ndarray]]:
         if key in self._ram:
             self.hits += 1
-            return self._ram[key]
+            # refresh recency so eviction order tracks access, not just
+            # insertion (dicts iterate in insertion order)
+            entry = self._ram.pop(key)
+            self._ram[key] = entry
+            return entry
         if key in self._disk:
             self.hits += 1
             # npz archives cannot be mmapped; close the zip handle rather
             # than leaking one file descriptor per disk hit
             with np.load(self._disk[key]) as z:
-                return z["b0"], z["taps"]
+                b0, taps = z["b0"], z["taps"]
+            # promote the hit into RAM, *keeping* the npz as a clean copy:
+            # evicting a promoted entry later is then free (no rewrite), so
+            # the cyclic epoch sweep of a corpus larger than the budget
+            # costs one read per miss — never a write per read
+            size = b0.nbytes + taps.nbytes
+            if size <= self.budget_bytes:
+                self._evict_until(self.budget_bytes - size)
+                self._ram[key] = (b0, taps)
+                self._ram_bytes += size
+            return b0, taps
         self.misses += 1
         return None
 

@@ -131,7 +131,6 @@ def adapter_forward(
     """
     acfg = adapter_config(cfg, r)
     downs = adapter_params["downs"]
-    lam = jax.nn.sigmoid  # noqa: E731 — documented below
     # λ is stored unconstrained in [0,1] at init (0.5); clamp softly.
     lambdas = jnp.clip(adapter_params["lambda"], 0.0, 1.0)
 
@@ -188,7 +187,10 @@ def adapter_decode(
     def period_fn(carry, xs):
         a_prev = carry
         block_slice, cache_slice, down_i, lam_i, b_i = xs
-        h = lam_i * (b_i @ down_i) + (1.0 - lam_i) * a_prev
+        # cast like the train path (adapter_forward): λ is f32, which would
+        # upcast a bf16 carry and break the scan's carry-type invariant
+        mixed = lam_i * (b_i @ down_i) + (1.0 - lam_i) * a_prev
+        h = mixed.astype(a_prev.dtype)
         new_caches = []
         for j, spec in enumerate(acfg.pattern):
             h, nc = apply_block_decode(block_slice[j], h, acfg, spec, cache_slice[j], pos)

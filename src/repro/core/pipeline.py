@@ -9,14 +9,18 @@ Three layers:
    :class:`~repro.core.planner.Plan` through a discrete-event model
    (compute, inter-stage links, AllReduce) and returns the per-minibatch
    timeline; this is what the Fig. 12/16 benchmarks sweep.
-3. **Runtime** — ``pipeline_grads`` runs a *real* SPMD pipeline over a
+3. **Runtime** — ``pipeline_apply`` runs a *real* SPMD pipeline over a
    ``stage`` mesh axis with ``shard_map`` + ``ppermute`` (GPipe-style
-   rotation, autodiff straight through the collective), used on
-   multi-host-device CPU meshes in tests to prove gradient equivalence
-   with single-device training, and on TPU meshes as the edge-regime
-   executor. Micro-batch gradient accumulation ≡ the paper's per-stage
-   gradient aggregation; AllReduce of adapter grads is the (tiny)
-   trailing collective.
+   rotation, autodiff straight through the collective). Since PR 2 this
+   is the **trainer's execution path**, not a test-only artifact:
+   ``repro.launch.train --dp N --stages S`` runs epoch-1 PAC+ through it
+   on a 2-D ``(dp, stage)`` mesh (``repro.core.steps
+   .pipeline_pac_train_step``), with each stage emitting its periods'
+   taps for the activation cache and the adapter, then drops to pure
+   data parallelism from epoch 2 (paper Fig. 10/11). Micro-batch
+   gradient accumulation ≡ the paper's per-stage gradient aggregation;
+   AllReduce of adapter grads over ``dp`` is the (tiny) trailing
+   collective.
 """
 
 from __future__ import annotations
@@ -158,13 +162,26 @@ def pipeline_apply(
     x_micro: jax.Array,
     mesh: Mesh,
     axis: str = "stage",
+    batch_axis: Optional[str] = None,
+    collect_taps: bool = False,
 ):
     """GPipe-style rotation: run ``stage_fn`` over pipelined micro-batches.
 
-    stage_fn(params_slice, h) -> h' — one stage's compute (same shape in/out).
+    stage_fn(params_slice, h) -> h' — one stage's compute (same shape
+    in/out). With ``collect_taps=True`` it must instead return
+    ``(h', taps)`` where ``taps`` has shape (periods_per_stage, mb, ...)
+    — the stage's intermediate activations, e.g. the post-period hidden
+    states PAC+'s adapter consumes.
+
     stage_params: leaves with leading dim n_stages (sharded over ``axis``).
-    x_micro: (n_micro, mb, ...) micro-batched input (replicated).
-    Returns (n_micro, mb, ...) outputs of the LAST stage (replicated).
+    x_micro: (n_micro, mb, ...) micro-batched input. When ``batch_axis``
+    names a second mesh axis, dim 1 (the micro-batch) is sharded over it
+    — hybrid data×pipeline parallelism on a 2-D ``(dp, stage)`` mesh.
+
+    Returns the (n_micro, mb, ...) outputs of the LAST stage, or with
+    ``collect_taps`` a pair ``(outs, taps)`` where ``taps`` is
+    (n_micro, n_periods_total, mb, ...) assembled across stages in layer
+    order (stage s owns periods [s·pp, (s+1)·pp)).
 
     Differentiable: ``ppermute``'s transpose is the reverse permutation, so
     ``jax.grad`` through this function implements the backward pipeline.
@@ -178,12 +195,23 @@ def pipeline_apply(
         state = jnp.zeros_like(xs[0])
         outs = jnp.zeros_like(xs)
         local_params = jax.tree.map(lambda p: p[0], params)
+        taps_buf = None
 
         def step(carry, t):
-            state, outs = carry
+            state, outs, taps_buf = carry
             inject = jnp.where(t < n_micro, t, 0)
             x_in = jnp.where(idx == 0, xs[inject], state)
-            y = stage_fn(local_params, x_in)
+            if collect_taps:
+                y, taps = stage_fn(local_params, x_in)
+            else:
+                y = stage_fn(local_params, x_in)
+            # this stage processes micro-batch m = t - idx at time t
+            m = t - idx
+            if collect_taps:
+                slot_m = jnp.clip(m, 0, n_micro - 1)
+                valid = jnp.logical_and(m >= 0, m < n_micro)
+                upd = jax.lax.dynamic_update_index_in_dim(taps_buf, taps, slot_m, 0)
+                taps_buf = jnp.where(valid, upd, taps_buf)
             # collect finished micro-batches on the last stage
             out_t = t - (n_stages - 1)
             slot = jnp.clip(out_t, 0, n_micro - 1)
@@ -193,22 +221,45 @@ def pipeline_apply(
             # rotate activations forward one stage
             perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
             state = jax.lax.ppermute(y, axis, perm)
-            return (state, outs), None
+            return (state, outs, taps_buf), None
 
-        (state, outs), _ = jax.lax.scan(step, (state, outs), jnp.arange(T))
+        if collect_taps:
+            # probe the per-stage tap shape without committing compute
+            tap_shape = jax.eval_shape(stage_fn, local_params, xs[0])[1]
+            taps_buf = jnp.zeros((n_micro,) + tap_shape.shape, tap_shape.dtype)
+        (state, outs, taps_buf), _ = jax.lax.scan(
+            step, (state, outs, taps_buf), jnp.arange(T)
+        )
         # replicate the last stage's buffer everywhere (psum of masked copies —
         # a broadcast; ppermute cannot fan out one source to all)
         outs = jax.lax.psum(jnp.where(idx == n_stages - 1, outs, 0.0), axis)
+        if collect_taps:
+            # (1, n_micro, pp, mb, ...) sharded over `axis` on the new
+            # leading dim → global (n_stages, n_micro, pp, mb, ...)
+            return outs, taps_buf[None]
         return outs
 
+    b = batch_axis
+    x_spec = P(None, b) if b else P()
+    if collect_taps:
+        out_specs = (x_spec, P(axis, None, None, b) if b else P(axis))
+    else:
+        out_specs = x_spec
     fn = shard_map(
         spmd,
         mesh=mesh,
-        in_specs=(P(axis), P()),
-        out_specs=P(),
+        in_specs=(P(axis), x_spec),
+        out_specs=out_specs,
         check_rep=False,
     )
-    return fn(stage_params, x_micro)
+    if not collect_taps:
+        return fn(stage_params, x_micro)
+    outs, taps = fn(stage_params, x_micro)
+    # (n_stages, n_micro, pp, mb, ...) → (n_micro, n_stages·pp, mb, ...);
+    # stage-major period order == layer order (stack_stages is contiguous)
+    taps = jnp.moveaxis(taps, 0, 1)
+    taps = taps.reshape((taps.shape[0], taps.shape[1] * taps.shape[2]) + taps.shape[3:])
+    return outs, taps
 
 
 def pipeline_grads(

@@ -5,6 +5,9 @@ fine-tuning technique (the paper's comparison set) plus the serving paths:
 
 * ``pac_train_step``          — PAC+ epoch-1: frozen (possibly quantized)
                                  backbone forward + side-network update.
+* ``pipeline_pac_train_step`` — PAC+ epoch-1 on a 2-D (dp, stage) mesh:
+                                 staged backbone forward (1F1B) + dp
+                                 AllReduce of adapter grads.
 * ``pac_cached_train_step``   — PAC+ epoch≥2: adapter-only, from cache.
 * ``full_train_step``         — full fine-tuning baseline.
 * ``lora_train_step``         — LoRA baseline (backprop through backbone).
@@ -22,7 +25,9 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core import peft
 from repro.core.parallel_adapters import (
     adapter_decode,
@@ -46,8 +51,9 @@ from repro.optim import adamw_update, clip_by_global_norm
 
 
 def pac_loss_fn(adapter_params, backbone_params, cfg, batch, r: int = 8):
-    x, positions = embed_inputs(backbone_params, cfg, batch)
-    b_final, taps = backbone_forward(backbone_params, cfg, batch, collect_taps=True)
+    b_final, taps, x, positions = backbone_forward(
+        backbone_params, cfg, batch, collect_taps=True, return_inputs=True
+    )
     # the gradient "highway": nothing upstream of the taps is differentiated
     x, b_final, taps = jax.lax.stop_gradient((x, b_final, taps))
     logits = pac_logits(backbone_params, adapter_params, cfg, x, taps, b_final, positions, r)
@@ -57,9 +63,12 @@ def pac_loss_fn(adapter_params, backbone_params, cfg, batch, r: int = 8):
 def pac_train_step(
     backbone_params, adapter_params, opt_state, batch, *, cfg, r: int = 8, lr=1e-3, clip=1.0
 ):
-    """Epoch-1 PAC+ step. Returns (loss, adapter_params', opt_state', (b0, taps))."""
-    x, positions = embed_inputs(backbone_params, cfg, batch)
-    b_final, taps = backbone_forward(backbone_params, cfg, batch, collect_taps=True)
+    """Epoch-1 PAC+ step.
+
+    Returns (loss, adapter_params', opt_state', (b0, taps, b_final))."""
+    b_final, taps, x, positions = backbone_forward(
+        backbone_params, cfg, batch, collect_taps=True, return_inputs=True
+    )
     x, b_final, taps = jax.lax.stop_gradient((x, b_final, taps))
 
     def loss_fn(ap):
@@ -99,6 +108,137 @@ def pac_cached_train_step(
     grads, _ = clip_by_global_norm(grads, clip)
     adapter_params, opt_state = adamw_update(adapter_params, grads, opt_state, lr=lr)
     return loss, adapter_params, opt_state
+
+
+# ---------------------------------------------------------------------------
+# Hybrid DP×PP PAC+ step (paper Fig. 10/11 — the epoch-1 edge-pool regime)
+# ---------------------------------------------------------------------------
+
+
+def _backbone_stage_fn(cfg):
+    """One pipeline stage of the frozen backbone: scan this stage's periods,
+    emitting every period's hidden state (the PAC+ taps)."""
+    from repro.models.backbone import apply_block
+
+    def stage_fn(block_slice, h):
+        lead = (3,) if cfg.rope == "mrope" else ()
+        positions = jnp.broadcast_to(
+            jnp.arange(h.shape[1], dtype=jnp.int32), lead + h.shape[:2]
+        )
+
+        def period_fn(carry, bs):
+            hh = carry
+            for i, spec in enumerate(cfg.pattern):
+                hh = apply_block(bs[i], hh, cfg, spec, positions)
+            return hh, hh
+
+        return jax.lax.scan(period_fn, h, tuple(block_slice))
+
+    return stage_fn
+
+
+def pipeline_pac_loss_and_grads(
+    backbone_params, adapter_params, batch, *, cfg, mesh, n_micro,
+    r: int = 8, dp_axis: str = "dp", stage_axis: str = "stage",
+):
+    """Distributed epoch-1 forward+grads: staged backbone forward over the
+    ``stage`` mesh axis (1F1B micro-batching via :func:`pipeline_apply`),
+    adapter loss/grads data-parallel over ``dp`` with an explicit psum
+    (the paper's per-minibatch AllReduce of the *trainable* params only).
+
+    Returns (loss, adapter_grads, (b0, taps, b_final)) — the activation
+    triple is what the cache captures; all are global (dp-sharded) arrays.
+    """
+    from repro.core.pipeline import pipeline_apply, stack_stages
+    from repro.models.backbone import cross_entropy_parts
+
+    from repro.data import DataPipeline
+
+    n_stages = mesh.shape[stage_axis]
+    dp = mesh.shape[dp_axis] if dp_axis in mesh.axis_names else 1
+    if cfg.n_periods % n_stages:
+        raise ValueError(
+            f"{cfg.n_periods} periods not divisible by {n_stages} pipeline stages"
+        )
+    if "positions" in batch:
+        # _backbone_stage_fn rebuilds implicit arange positions per stage;
+        # silently running custom positions through it would cache wrong
+        # activations for every later epoch
+        raise NotImplementedError(
+            "pipeline_pac_train_step supports implicit (arange) positions only"
+        )
+
+    x, positions = embed_inputs(backbone_params, cfg, batch)
+    B = x.shape[0]
+    # staged backbone forward: (B,S,d) → micro-batched → 1F1B pipeline
+    # (dp_microbatches owns the layout contract + divisibility checks)
+    x_micro = DataPipeline.dp_microbatches({"x": x}, n_micro, dp)["x"]
+    stage_blocks = stack_stages(backbone_params["blocks"], n_stages)
+    b_final_micro, taps_micro = pipeline_apply(
+        _backbone_stage_fn(cfg), stage_blocks, x_micro, mesh,
+        axis=stage_axis, batch_axis=dp_axis if dp > 1 else None,
+        collect_taps=True,
+    )
+    b_final = b_final_micro.reshape((B,) + b_final_micro.shape[2:])
+    # (n_micro, n_p, mb, S, d) → (n_p, B, S, d) — micro-major sample order
+    taps = jnp.moveaxis(taps_micro, 1, 0)
+    taps = taps.reshape(taps.shape[:1] + (B,) + taps.shape[3:])
+    b0, taps, b_final = jax.lax.stop_gradient((x, taps, b_final))
+
+    # adapter loss + grads, dp-sharded batch, explicit AllReduce
+    def spmd_grads(ap, head, b0_l, taps_l, bf_l, labels_l, pos_l):
+        def loss_fn(a):
+            logits = pac_logits(head, a, cfg, b0_l, taps_l, bf_l, pos_l, r)
+            num, den = cross_entropy_parts(logits, labels_l)
+            if dp > 1:  # global mean: psum parts, not pmean of local means
+                num = jax.lax.psum(num, dp_axis)
+                den = jax.lax.psum(den, dp_axis)
+            return num / jnp.maximum(den, 1)
+
+        loss, grads = jax.value_and_grad(loss_fn)(ap)
+        if dp > 1:
+            # AllReduce completes the global gradient (trainable params
+            # only — tiny). pmean, not psum: the transpose of the psum in
+            # loss_fn already re-sums the replicated cotangent over dp, so
+            # each shard's grad carries a dp× factor that the mean removes.
+            grads = jax.tree.map(lambda g: jax.lax.pmean(g, dp_axis), grads)
+        return loss, grads
+
+    bspec = P(dp_axis) if dp > 1 else P()
+    tspec = P(None, dp_axis) if dp > 1 else P()
+    pspec = (P(None, dp_axis) if positions.ndim == 3 else P(dp_axis)) if dp > 1 else P()
+    fn = shard_map(
+        spmd_grads,
+        mesh=mesh,
+        in_specs=(P(), P(), bspec, tspec, bspec, bspec, pspec),
+        out_specs=(P(), P()),
+        check_rep=False,
+    )
+    loss, grads = fn(
+        adapter_params, backbone_params, b0, taps, b_final, batch["labels"], positions
+    )
+    return loss, grads, (b0, taps, b_final)
+
+
+def pipeline_pac_train_step(
+    backbone_params, adapter_params, opt_state, batch, *, cfg, mesh, n_micro,
+    r: int = 8, lr=1e-3, clip=1.0, dp_axis: str = "dp", stage_axis: str = "stage",
+):
+    """Epoch-1 PAC+ step on a 2-D ``(dp, stage)`` mesh — the distributed
+    twin of :func:`pac_train_step` (same signature plus mesh/n_micro).
+
+    Backbone forward runs staged over ``stage`` with 1F1B micro-batching;
+    adapter grads are AllReduced across ``dp``; the update itself is
+    replicated (identical on every device after the AllReduce). Returns
+    (loss, adapter_params', opt_state', (b0, taps, b_final)).
+    """
+    loss, grads, acts = pipeline_pac_loss_and_grads(
+        backbone_params, adapter_params, batch, cfg=cfg, mesh=mesh,
+        n_micro=n_micro, r=r, dp_axis=dp_axis, stage_axis=stage_axis,
+    )
+    grads, _ = clip_by_global_norm(grads, clip)
+    adapter_params, opt_state = adamw_update(adapter_params, grads, opt_state, lr=lr)
+    return loss, adapter_params, opt_state, acts
 
 
 # ---------------------------------------------------------------------------

@@ -108,3 +108,26 @@ class DataPipeline:
             return x.reshape((n_micro, b // n_micro) + x.shape[1:])
 
         return {k: f(v) for k, v in batch.items()}
+
+    @staticmethod
+    def dp_microbatches(batch: dict, n_micro: int, dp: int = 1) -> dict:
+        """Micro-batch layout for the hybrid DP×PP trainer.
+
+        (B, ...) -> (n_micro, mb, ...) with mb = B/n_micro, where dim 1
+        is contiguous-chunk shardable over ``dp`` ranks: dp rank ``r`` of
+        micro ``m`` owns original samples
+        ``[m·mb + r·mb/dp, m·mb + (r+1)·mb/dp)`` — the layout
+        ``pipeline_apply(batch_axis="dp")`` shards, and the order the
+        activation-cache keys follow. Raises (not asserts) on
+        indivisibility so CLI misconfiguration fails with a clear
+        message before any compute.
+        """
+        B = next(iter(batch.values())).shape[0]
+        if n_micro < 1 or dp < 1:
+            raise ValueError(f"n_micro={n_micro} and dp={dp} must be >= 1")
+        if B % (n_micro * dp):
+            raise ValueError(
+                f"global batch {B} must be divisible by n_micro×dp = "
+                f"{n_micro}×{dp}; adjust --batch/--micro/--dp"
+            )
+        return DataPipeline.microbatches(batch, n_micro)

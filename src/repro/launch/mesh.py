@@ -26,9 +26,29 @@ def make_mesh(shape, axes):
     return compat.make_mesh(shape, axes)
 
 
+def make_edge_mesh(dp: int, stages: int, devices=None):
+    """2-D ``(dp, stage)`` mesh for the hybrid DP×PP edge trainer.
+
+    ``devices`` defaults to the first dp·stages of ``jax.devices()`` (on
+    CPU, fake host devices from ``compat.force_host_device_count``)."""
+    import jax
+
+    total = dp * stages
+    if devices is None:
+        devices = jax.devices()
+    if len(devices) < total:
+        raise RuntimeError(
+            f"need {total} devices for a {dp}×{stages} (dp, stage) mesh, "
+            f"have {len(devices)}; on CPU call "
+            f"compat.force_host_device_count({total}) before any JAX use"
+        )
+    return compat.make_mesh((dp, stages), ("dp", "stage"), devices=devices[:total])
+
+
 def data_axes(mesh) -> tuple:
-    """Mesh axes that shard the batch (pod composes with data)."""
-    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    """Mesh axes that shard the batch (pod composes with data; the edge
+    trainer's 2-D mesh calls its batch axis dp)."""
+    return tuple(a for a in ("pod", "data", "dp") if a in mesh.axis_names)
 
 
 def model_axis(mesh) -> str:

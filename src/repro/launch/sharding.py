@@ -53,9 +53,13 @@ def param_specs(params, mesh: Mesh):
     )
 
 
-def batch_specs(batch, mesh: Mesh, shard_batch: bool = True):
-    """Specs for a training/serving batch dict."""
-    dp = data_axes(mesh)
+def batch_specs(batch, mesh: Mesh, shard_batch: bool = True, batch_axes=None):
+    """Specs for a training/serving batch dict.
+
+    ``batch_axes`` overrides the default ``data_axes(mesh)`` — e.g. the
+    epoch≥2 cached phase shards over the pipeline axis too (the whole
+    pool is pure-DP once the backbone no longer runs)."""
+    dp = tuple(batch_axes) if batch_axes is not None else data_axes(mesh)
     dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
 
     def spec_for(path, leaf):
@@ -118,6 +122,39 @@ def cache_specs(cache, mesh: Mesh, B: int):
         )
 
     return compat.tree_map_with_path(spec_for, cache)
+
+
+def replicated(tree, mesh: Mesh):
+    """NamedSharding pytree replicating every leaf of ``tree`` over ``mesh``.
+
+    The edge trainer's adapter/optimizer state is tiny (1/r² of the
+    backbone) — the paper keeps it replicated on every device and
+    AllReduces grads, rather than FSDP-sharding it."""
+    s = NamedSharding(mesh, P())
+    return compat.tree_map(lambda _: s, tree)
+
+
+def cached_step_shardings(backbone, adapter, opt_state, cached_batch, mesh: Mesh):
+    """in_shardings for the epoch≥2 pure-DP cached step
+    (``pac_cached_train_step(backbone, adapter, opt, cached_batch)``):
+    params/optimizer replicated, the cached activation batch sharded over
+    the data axes — *including* the pipeline ``stage`` axis when the
+    batch divides (the backbone no longer runs from epoch 2, so the whole
+    pool data-parallels instead of the stage devices duplicating work).
+    One definition of the cached-batch sharding contract, shared by the
+    trainer, benchmarks, and examples."""
+    axes = list(data_axes(mesh))
+    if "stage" in mesh.axis_names:
+        B = cached_batch["b0"].shape[0]
+        pool = int(np.prod([mesh.shape[a] for a in axes + ["stage"]]))
+        if B % pool == 0:
+            axes.append("stage")
+    return (
+        replicated(backbone, mesh),
+        replicated(adapter, mesh),
+        replicated(opt_state, mesh),
+        to_named(batch_specs(cached_batch, mesh, batch_axes=axes), mesh),
+    )
 
 
 def to_named(tree_specs, mesh: Mesh):

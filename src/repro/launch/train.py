@@ -4,8 +4,21 @@ Runs the paper's full workflow (Fig. 4): quantize → init adapters →
 plan → epoch-1 (backbone fwd + adapter update, cache capture) →
 epoch≥2 (cache hit, adapter-only). CPU-runnable with --reduced.
 
+With ``--dp``/``--stages`` the trainer executes the planner's hybrid
+parallelism on a real 2-D ``(dp, stage)`` device mesh (paper Fig. 10/11):
+epoch-1 stages the frozen-backbone forward over the pipeline axis with
+1F1B micro-batching and AllReduces the adapter grads across ``dp``; from
+epoch 2 the warm activation cache drops the run to *pure* data
+parallelism. On CPU the mesh is emulated with
+``compat.force_host_device_count`` (dp·stages fake host devices) — the
+same path CI exercises on every PR.
+
     PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
         --reduced --epochs 3 --steps-per-epoch 8 --batch 4 --seq 32
+
+    # hybrid DP×PP on an emulated 4-device mesh
+    PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
+        --reduced --dp 2 --stages 2 --epochs 3 --batch 4 --seq 32
 """
 
 from __future__ import annotations
@@ -14,25 +27,9 @@ import argparse
 import functools
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import save_checkpoint
-from repro.configs import get_arch
-from repro.core import steps
-from repro.core.activation_cache import ActivationCache
-from repro.core.init_methods import pruning_init
-from repro.core.parallel_adapters import init_adapter
-from repro.core.planner import (
-    HybridParallelismPlanner,
-    JETSON_NANO_H,
-    model_layer_costs,
-)
-from repro.core.quantization import quantize_tree, tree_storage_bytes
-from repro.data import DataPipeline, SyntheticPersonalCorpus
-from repro.models import backbone as bb
-from repro.optim import adamw_init, cosine_schedule
+from repro import compat
 
 
 def main() -> None:
@@ -50,13 +47,56 @@ def main() -> None:
     ap.add_argument("--no-cache", action="store_true")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--dp", type=int, default=1, help="data-parallel mesh axis")
+    ap.add_argument("--stages", type=int, default=1, help="pipeline stages (mesh axis)")
+    ap.add_argument("--micro", type=int, default=None,
+                    help="micro-batches per minibatch (default: --stages)")
     args = ap.parse_args()
+
+    total = args.dp * args.stages
+    if total > 1:
+        # must precede the first JAX backend initialisation: on CPU this
+        # fakes dp·stages host devices so the SPMD mesh is real
+        compat.force_host_device_count(total)
+
+    import jax  # noqa: E402 — after the device-count knob
+    import jax.numpy as jnp
+
+    from repro.checkpoint import save_checkpoint
+    from repro.configs import get_arch
+    from repro.core import steps
+    from repro.core.activation_cache import ActivationCache
+    from repro.core.init_methods import pruning_init
+    from repro.core.parallel_adapters import init_adapter
+    from repro.core.planner import (
+        HybridParallelismPlanner,
+        JETSON_NANO_H,
+        model_layer_costs,
+    )
+    from repro.core.quantization import quantize_tree, tree_storage_bytes
+    from repro.data import DataPipeline, SyntheticPersonalCorpus
+    from repro.launch import sharding as shard
+    from repro.launch.mesh import make_edge_mesh
+    from repro.models import backbone as bb
+    from repro.optim import adamw_init
 
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     print(f"arch={cfg.name} params≈{cfg.param_count()/1e6:.1f}M "
           f"active≈{cfg.active_param_count()/1e6:.1f}M")
+
+    distributed = total > 1
+    # default micro count: the mesh's stage count when distributed; the
+    # pre-existing 4-micro-batch planning report otherwise
+    n_micro = args.micro if args.micro is not None else (args.stages if distributed else 4)
+    if distributed:
+        if cfg.n_periods % args.stages:
+            raise SystemExit(
+                f"--stages {args.stages} must divide n_periods={cfg.n_periods}")
+        # fail fast on an impossible batch layout, before any compute
+        DataPipeline.dp_microbatches(
+            {"tokens": np.zeros((args.batch, args.seq), np.int32)}, n_micro, args.dp)
 
     bp = bb.init_backbone(jax.random.PRNGKey(args.seed), cfg)
     if args.quant:
@@ -74,12 +114,24 @@ def main() -> None:
           f"({n_train/cfg.param_count():.2%} of backbone)")
     opt = adamw_init(adapter)
 
-    # offline planning report (paper Step 3-4)
+    # offline planning (paper Step 3-4): the plan is computed for the
+    # executed micro-batch count; the stage count is CLI-pinned to the
+    # mesh shape and the planner's σ-optimum is reported against it
+    pool = max(total, 4)
     plan = HybridParallelismPlanner(
-        model_layer_costs(cfg, "pac", seq_len=args.seq), [JETSON_NANO_H] * 4,
-        args.batch, 4,
-    ).plan()
+        model_layer_costs(cfg, "pac", seq_len=args.seq), [JETSON_NANO_H] * pool,
+        args.batch, n_micro,
+    ).plan(max_stages=args.stages if distributed else None)
     print("edge-pool plan:", plan.describe().splitlines()[0])
+    if distributed and plan.n_stages != args.stages:
+        print(f"note: planner's σ-optimal stage count is {plan.n_stages}; "
+              f"executing --stages {args.stages} (uniform period split)")
+
+    mesh = None
+    if distributed:
+        mesh = make_edge_mesh(args.dp, args.stages)
+        print(f"mesh: hybrid dp={args.dp}×pp={args.stages} on "
+              f"{total} devices, {n_micro} micro-batches")
 
     n_seq = args.steps_per_epoch * args.batch
     corpus = SyntheticPersonalCorpus(cfg.vocab, args.seq + 1, n_seq, seed=args.seed)
@@ -89,20 +141,29 @@ def main() -> None:
 
     step1 = jax.jit(functools.partial(steps.pac_train_step, cfg=cfg, r=args.r, lr=args.lr))
     stepN = jax.jit(functools.partial(steps.pac_cached_train_step, cfg=cfg, r=args.r, lr=args.lr))
+    if distributed:
+        # epoch-1: staged backbone forward over `stage` + dp AllReduce
+        step1 = jax.jit(functools.partial(
+            steps.pipeline_pac_train_step, cfg=cfg, mesh=mesh, n_micro=n_micro,
+            r=args.r, lr=args.lr))
+        stepN = None  # built on first cached batch (needs its tree structure)
 
     for epoch in range(args.epochs):
         t0 = time.time()
         losses = []
-        for batch in pipe.epoch(0):
+        used_cache = False
+        for batch in pipe.epoch(epoch):
             ids = batch.pop("seq_ids")
             hit = None if args.no_cache else cache.get_batch(ids)
             if hit is None:
                 loss, adapter, opt, (b0, taps, bf) = step1(bq, adapter, opt, batch)
                 if not args.no_cache:
                     cache.put_batch(ids, b0, taps)
+                    bf_np = np.asarray(bf)  # one device→host gather, not B
                     for i, k in enumerate(ids):
-                        bfinal_cache[int(k)] = np.asarray(bf)[i]
+                        bfinal_cache[int(k)] = bf_np[i]
             else:
+                used_cache = True
                 b0, taps = hit
                 cached = {
                     "b0": jnp.asarray(b0),
@@ -110,10 +171,21 @@ def main() -> None:
                     "b_final": jnp.asarray(np.stack([bfinal_cache[int(k)] for k in ids])),
                     "labels": batch["labels"],
                 }
+                if stepN is None:  # epoch≥2 distributed: *pure* DP over the mesh
+                    stepN = jax.jit(
+                        functools.partial(steps.pac_cached_train_step,
+                                          cfg=cfg, r=args.r, lr=args.lr),
+                        in_shardings=shard.cached_step_shardings(
+                            bq, adapter, opt, cached, mesh))
                 loss, adapter, opt = stepN(bq, adapter, opt, cached)
             losses.append(float(loss))
         dt = time.time() - t0
-        mode = "cached" if (epoch > 0 and not args.no_cache) else "full"
+        if used_cache:
+            mode = "cached pure-dp" if distributed else "cached"
+        elif distributed:
+            mode = f"hybrid dp{args.dp}xpp{args.stages}"
+        else:
+            mode = "full"
         print(f"epoch {epoch}: loss={np.mean(losses):.4f} time={dt:.1f}s ({mode}) "
               f"cache[{len(cache)} seqs, {cache.nbytes/2**20:.0f} MB]")
 

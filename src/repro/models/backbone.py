@@ -150,9 +150,16 @@ def embed_inputs(params, cfg, batch: dict):
     return x, positions
 
 
-def backbone_forward(params, cfg, batch: dict, collect_taps: bool = False):
-    """Returns (final_hidden (B,S,d), taps (n_periods,B,S,d) | None)."""
+def backbone_forward(params, cfg, batch: dict, collect_taps: bool = False,
+                     return_inputs: bool = False):
+    """Returns (final_hidden (B,S,d), taps (n_periods,B,S,d) | None).
+
+    With ``return_inputs=True`` the embedded input and positions are also
+    returned — ``(final, taps, x0, positions)`` — so callers that need
+    ``b0`` (the PAC+ steps) don't pay the embedding lookup twice.
+    """
     x, positions = embed_inputs(params, cfg, batch)
+    x0 = x
 
     def period_fn(carry, block_slice):
         h = carry
@@ -161,6 +168,8 @@ def backbone_forward(params, cfg, batch: dict, collect_taps: bool = False):
         return h, (h if collect_taps else None)
 
     x, taps = jax.lax.scan(period_fn, x, tuple(params["blocks"]))
+    if return_inputs:
+        return x, taps, x0, positions
     return x, taps
 
 
@@ -190,12 +199,23 @@ def cross_entropy(logits: jax.Array, labels: jax.Array, ignore: int = -100):
     The one-hot product reduces over the sharded vocab locally and
     all-reduces only (B,S) partials.
     """
+    num, den = cross_entropy_parts(logits, labels, ignore)
+    return num / jnp.maximum(den, 1)
+
+
+def cross_entropy_parts(logits: jax.Array, labels: jax.Array, ignore: int = -100):
+    """(summed NLL, valid-token count) — the pieces of the mean CE.
+
+    Exposed so data-parallel callers can ``psum`` numerator and
+    denominator separately and divide once: a pmean of per-shard means is
+    only exact when every shard holds the same number of non-ignored
+    tokens."""
     mask = labels != ignore
     labels = jnp.where(mask, labels, 0)
     logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
     onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logp.dtype)
     nll = -jnp.einsum("bsv,bsv->bs", logp, onehot)
-    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+    return jnp.sum(nll * mask), jnp.sum(mask)
 
 
 # ---------------------------------------------------------------------------

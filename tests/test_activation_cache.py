@@ -1,5 +1,7 @@
 """Regression tests for ActivationCache byte accounting and fd hygiene."""
 
+import os
+
 import numpy as np
 import pytest
 
@@ -102,6 +104,111 @@ def test_disk_get_closes_npz_handle(tmp_path, monkeypatch):
     assert closed == opened, "get() must close the npz archive it opened"
     for z in opened:  # break the z -> close_once -> z ref cycle
         del z.close
+
+
+def test_eviction_spills_oldest_keeps_recent_in_ram(tmp_path):
+    """Under budget pressure the *oldest* RAM entries move to disk and the
+    new entry stays RAM-resident — later traffic must not be frozen out
+    of RAM by the earliest sequences (the pre-fix policy spilled every
+    new entry once RAM filled)."""
+    one = _entry_bytes()
+    cache = ActivationCache(budget_bytes=2 * one, spill_dir=str(tmp_path))
+    for k in range(6):
+        cache.put(k, *_entry(k))
+    # the two most recent keys are in RAM, the four oldest on disk
+    assert set(cache._ram) == {4, 5}
+    assert set(cache._disk) == {0, 1, 2, 3}
+    assert cache.nbytes <= 2 * one
+    for k in range(6):  # nothing was dropped
+        got = cache.get(k)
+        ref = _entry(k)
+        np.testing.assert_array_equal(got[0], ref[0])
+        np.testing.assert_array_equal(got[1], ref[1])
+
+
+def test_disk_hit_promoted_back_to_ram(tmp_path, monkeypatch):
+    """A disk hit is promoted into RAM so a re-read serves from memory; the
+    npz stays behind as a *clean* copy, so evicting the promoted entry
+    later is free and a cyclic sweep of an over-budget corpus never pays
+    a write per read."""
+    one = _entry_bytes()
+    cache = ActivationCache(budget_bytes=2 * one, spill_dir=str(tmp_path))
+    for k in range(4):
+        cache.put(k, *_entry(k))
+    assert 0 in cache._disk
+    got = cache.get(0)
+    np.testing.assert_array_equal(got[0], _entry(0)[0])
+    assert 0 in cache._ram  # promoted (clean disk copy kept)
+    assert cache.nbytes <= 2 * one
+    assert len(cache) == 4  # overlap not double-counted
+    # second read must not touch disk
+    loads = []
+    real_load = np.load
+    monkeypatch.setattr(np, "load", lambda *a, **k: loads.append(a) or real_load(*a, **k))
+    got2 = cache.get(0)
+    np.testing.assert_array_equal(got2[0], _entry(0)[0])
+    assert loads == []
+    # epoch sweeps over the over-budget corpus: the first sweep may spill
+    # still-dirty entries once; after that every entry has a clean disk
+    # copy, so promotions/evictions never write again (mtimes stay fixed)
+    for k in range(4):
+        cache.get(k)  # warm-up sweep
+    mtimes = {p: os.path.getmtime(p) for p in map(str, tmp_path.iterdir())}
+    for _ in range(2):
+        for k in range(4):
+            got = cache.get(k)
+            np.testing.assert_array_equal(got[0], _entry(k)[0])
+    after = {p: os.path.getmtime(p) for p in map(str, tmp_path.iterdir())}
+    assert after == mtimes, "promotion must not rewrite clean spill files"
+
+
+def test_oversized_entry_spills_without_flushing_ram(tmp_path):
+    """An entry larger than the whole budget goes straight to disk — it
+    must not evict the (hot) RAM working set to make room that can never
+    suffice."""
+    one = _entry_bytes()
+    cache = ActivationCache(budget_bytes=2 * one, spill_dir=str(tmp_path))
+    cache.put(0, *_entry(0))
+    cache.put(1, *_entry(1))
+    cache.put(99, *_entry(9, S=64))  # 8x the budget
+    assert set(cache._ram) == {0, 1}, "hot set must survive an oversized put"
+    assert 99 in cache._disk
+    got = cache.get(99)
+    np.testing.assert_array_equal(got[0], _entry(9, S=64)[0])
+
+
+def test_ram_hit_refreshes_recency(tmp_path):
+    """Reading a RAM entry protects it from the next eviction round."""
+    one = _entry_bytes()
+    cache = ActivationCache(budget_bytes=2 * one, spill_dir=str(tmp_path))
+    cache.put(0, *_entry(0))
+    cache.put(1, *_entry(1))
+    cache.get(0)  # 0 is now more recent than 1
+    cache.put(2, *_entry(2))  # evicts 1, not 0
+    assert set(cache._ram) == {0, 2}
+    assert set(cache._disk) == {1}
+
+
+def test_eviction_without_spill_dir_still_drops_oldest():
+    one = _entry_bytes()
+    cache = ActivationCache(budget_bytes=2 * one)
+    for k in range(3):
+        cache.put(k, *_entry(k))
+    assert set(cache._ram) == {1, 2}
+    assert cache.get(0) is None  # dropped, not spilled: re-forward later
+
+
+def test_oversized_entry_without_spill_dir_keeps_hot_set():
+    """No spill_dir: an over-budget entry is dropped (one re-forward),
+    not inserted by flushing every hot entry (N re-forwards)."""
+    one = _entry_bytes()
+    cache = ActivationCache(budget_bytes=2 * one)
+    cache.put(0, *_entry(0))
+    cache.put(1, *_entry(1))
+    cache.put(99, *_entry(9, S=64))  # 8x the budget
+    assert set(cache._ram) == {0, 1}
+    assert cache.get(99) is None
+    assert cache.nbytes == 2 * one
 
 
 def test_disk_hit_survives_spill_file_rewrite(tmp_path):

@@ -181,6 +181,23 @@ def test_cache_path_loss_and_grad_equivalence_end_to_end(
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
 
 
+def test_adapter_decode_bf16_params(tiny_cfg):
+    """Regression: adapter_decode must cast the λ-mixed tap/carry sum back
+    to the carry dtype like adapter_forward does — with bf16 adapter
+    params the f32 λ upcast the carry and scan rejected the carry type."""
+    from repro.core.parallel_adapters import adapter_decode, init_adapter_cache
+
+    cfg = tiny_cfg
+    ap16 = init_adapter(jax.random.PRNGKey(1), cfg, r=4, dtype=jnp.bfloat16)
+    B = 2
+    acache = init_adapter_cache(cfg, B, 8, r=4, dtype=jnp.bfloat16)
+    b0_t = jnp.ones((B, 1, cfg.d_model), jnp.bfloat16) * 0.1
+    taps_t = jnp.ones((cfg.n_periods, B, 1, cfg.d_model), jnp.bfloat16) * 0.1
+    out, new_cache = adapter_decode(ap16, cfg, b0_t, taps_t, acache, jnp.int32(0), r=4)
+    assert out.shape == (B, 1, cfg.d_model)
+    assert np.isfinite(np.asarray(out, np.float32)).all()
+
+
 def test_adapter_config_scaling():
     cfg = get_arch("kimi-k2-1t-a32b")
     acfg = adapter_config(cfg, r=8)

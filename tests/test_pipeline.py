@@ -93,6 +93,39 @@ _SUBPROCESS_PIPELINE = textwrap.dedent(
 )
 
 
+_SUBPROCESS_PIPELINE_TAPS = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp
+    from repro.core.pipeline import stack_stages, pipeline_apply
+    from repro.launch.mesh import make_mesh
+
+    # 2-D (dp, stage) mesh: dim 1 of x_micro sharded over dp
+    mesh = make_mesh((2, 2), ("dp", "stage"))
+    n_p, d, n_stages = 8, 16, 2
+    W = jax.random.normal(jax.random.PRNGKey(0), (n_p, d, d)) * 0.1
+
+    def stage_fn(w_slice, h):
+        # emits every period's activation — the PAC+ tap contract
+        return jax.lax.scan(lambda h, w: ((jnp.tanh(h @ w),) * 2), h, w_slice)
+
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 4, d))  # 3 micro of 4
+    with mesh:
+        out, taps = pipeline_apply(
+            stage_fn, stack_stages(W, n_stages), x, mesh,
+            batch_axis="dp", collect_taps=True)
+    assert taps.shape == (3, n_p, 4, d), taps.shape
+    ref = x
+    for i in range(n_p):
+        ref = jnp.tanh(ref @ W[i])
+        assert float(jnp.max(jnp.abs(taps[:, i] - ref))) < 1e-5, f"tap {i} mismatch"
+    assert float(jnp.max(jnp.abs(out - ref))) < 1e-5, "fwd mismatch"
+    print("PIPELINE_TAPS_OK")
+    """
+)
+
+
 def _run_sub(code: str) -> str:
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
@@ -107,6 +140,12 @@ def _run_sub(code: str) -> str:
 
 def test_spmd_pipeline_forward_and_grads_match_single_device():
     assert "PIPELINE_OK" in _run_sub(_SUBPROCESS_PIPELINE)
+
+
+def test_spmd_pipeline_collects_all_stage_taps_on_dp_mesh():
+    """Every stage's per-period activations assemble into layer-ordered
+    taps (what PAC+ caches), with the micro-batch dim sharded over dp."""
+    assert "PIPELINE_TAPS_OK" in _run_sub(_SUBPROCESS_PIPELINE_TAPS)
 
 
 _SUBPROCESS_DP = textwrap.dedent(

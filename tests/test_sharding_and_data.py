@@ -100,6 +100,23 @@ def test_pipeline_epochs_shuffle_and_microbatch():
     assert mb["tokens"].shape[:2] == (4, 2)
 
 
+def test_dp_microbatches_layout_and_validation():
+    """The hybrid-trainer batch layout: (B,) → (n_micro, mb) with dim 1
+    contiguous-chunk shardable over dp ranks, and clear errors (not
+    asserts) on indivisible CLI combinations."""
+    corpus = glue_like_task("mrpc", 128, 16, scale=0.01)
+    batch = corpus.batch(np.arange(8))
+    mb = DataPipeline.dp_microbatches(batch, n_micro=2, dp=2)
+    assert mb["tokens"].shape[:2] == (2, 4)
+    # micro m, dp rank r owns samples [m*mb + r*mb/dp, ...): contiguous
+    np.testing.assert_array_equal(mb["seq_ids"][0], batch["seq_ids"][:4])
+    np.testing.assert_array_equal(mb["seq_ids"][1], batch["seq_ids"][4:])
+    with pytest.raises(ValueError, match="divisible"):
+        DataPipeline.dp_microbatches(batch, n_micro=2, dp=3)
+    with pytest.raises(ValueError, match=">= 1"):
+        DataPipeline.dp_microbatches(batch, n_micro=0, dp=1)
+
+
 def test_checkpoint_roundtrip_nested(tmp_path):
     tree = {
         "a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),

@@ -52,10 +52,16 @@ def test_full_pac_workflow(tmp_path):
     stepN = jax.jit(functools.partial(steps.pac_cached_train_step, cfg=cfg, r=4))
 
     losses = []
+    epoch_orders = []
     for epoch in range(EPOCHS):
         ep_losses = []
-        for batch in pipe.epoch(0):  # fixed order: cache keys must match
+        order = []
+        # real epoch index: order reshuffles every epoch, and the cache
+        # still hits — keys are per-sequence, exactly the paper's
+        # re-batching/redistribution of cached activations
+        for batch in pipe.epoch(epoch):
             ids = batch.pop("seq_ids")
+            order.extend(int(k) for k in ids)
             hit = cache.get_batch(ids)
             if hit is None:
                 # Step 5: epoch-1 — backbone forward + adapter update
@@ -76,8 +82,15 @@ def test_full_pac_workflow(tmp_path):
                 loss, ap, opt = stepN(bq, ap, opt, cached)
             ep_losses.append(float(loss))
         losses.append(float(np.mean(ep_losses)))
+        epoch_orders.append(order)
 
     assert cache.hits > 0 and cache.misses > 0
+    # shuffling varied the batch order across epochs (same id *set*)...
+    assert epoch_orders[0] != epoch_orders[1]
+    assert set(epoch_orders[0]) == set(epoch_orders[1])
+    # ...while every epoch≥2 sequence still hit the cache: 1 miss epoch
+    # plus (EPOCHS-1) fully-hit epochs over the 16-sequence corpus
+    assert cache.misses == 16 and cache.hits == (EPOCHS - 1) * 16
     assert losses[-1] < losses[0], f"no learning: {losses}"
 
     # checkpoint round-trip (quantized backbone + adapters)
