@@ -68,11 +68,12 @@ def main(arch="bart-large-pac") -> list:
         f"claim=26-71%, growing;holds={red10 > red2 and red10 > 0.25}",
     ))
 
-    # the functional cache round-trip (paper Fig. 11 redistribution)
+    # the functional cache round-trip (paper Fig. 11 redistribution),
+    # b_final folded into the budgeted entries (cache v2)
     cache = ActivationCache(budget_bytes=1 << 30)
-    cache.put_batch(list(b0batch["seq_ids"]), b0, taps)
-    got = cache.get_batch(list(b0batch["seq_ids"]))
-    assert got is not None
+    cache.put_batch(list(b0batch["seq_ids"]), b0, taps, bf)
+    got = cache.get_batch(list(b0batch["seq_ids"]), with_final=True)
+    assert got is not None and len(got) == 3
     out.append(row("fig11_cache_roundtrip", 0.0, f"entries={len(cache)};hits={cache.hits}"))
     return out
 

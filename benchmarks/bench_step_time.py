@@ -14,6 +14,7 @@ process: the device count locks at backend init).
 import functools
 
 import jax
+import jax.numpy as jnp
 
 from benchmarks.common import make_batch, row, timeit
 from repro.configs import get_arch
@@ -66,6 +67,32 @@ def main(arch="t5-base-pac") -> list:
         f"pac_time_saving={red:.2%};cached_saving={red_c:.2%};"
         f"claim=32-56% (96% cached);holds={red > 0.15 and red_c > red}",
     ))
+
+    # Activation-cache v2: storage + cached-step time per compression
+    # policy, with the decompress/reassemble path on the clock (what a
+    # cached epoch actually pays per step without the prefetcher)
+    from repro.core.activation_cache import ActivationCache
+
+    opt_a = adamw_init(ap)
+    stepN = jax.jit(functools.partial(steps.pac_cached_train_step, cfg=cfg, r=8))
+    ids = list(range(B))
+    for policy in ("f32", "bf16", "int8"):
+        cache = ActivationCache(budget_bytes=1 << 30, compress=policy)
+        cache.put_batch(ids, b0, taps, bf)
+
+        def cached_from_cache():
+            cb0, ctaps, cbf = cache.get_batch(ids, with_final=True, dtype=None)
+            return stepN(bp, ap, opt_a, {
+                "b0": jnp.asarray(cb0), "taps": jnp.asarray(ctaps),
+                "b_final": jnp.asarray(cbf), "labels": batch["labels"],
+            })
+
+        t = timeit(cached_from_cache)
+        out.append(row(
+            f"cachev2_step_time_{policy}", t * 1e6 / B,
+            f"cache_mb={cache.nbytes/2**20:.2f};"
+            f"per_seq_kb={cache.nbytes/B/1024:.1f};cached_step_ms={t*1e3:.2f}",
+        ))
     return out
 
 

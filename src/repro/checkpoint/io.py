@@ -8,6 +8,7 @@ paper's deployment story for edge flash).
 
 from __future__ import annotations
 
+import hashlib
 import os
 from typing import Any
 
@@ -81,3 +82,27 @@ def save_checkpoint(path: str, tree: Any) -> int:
 def load_checkpoint(path: str) -> Any:
     with open(path, "rb") as f:
         return _decode(msgpack.unpackb(f.read(), raw=False, strict_map_key=False))
+
+
+def tree_fingerprint(tree: Any) -> str:
+    """Stable 16-hex digest of a pytree's exact contents.
+
+    Reuses the checkpoint encoder, so anything checkpointable (plain
+    arrays, QTensor leaves, nested containers, scalars) can be
+    fingerprinted. The activation-cache manifest uses this to detect a
+    changed backbone or corpus across runs — any bit flip in any leaf,
+    or any structural change, yields a different digest.
+
+    Hashing is streamed leaf-by-leaf (treedef first), so no full-model
+    serialization buffer is ever materialized — on edge targets the
+    transient 1×-model-size allocation of a single packb would be the
+    difference between launching and OOMing.
+    """
+    h = hashlib.sha256()
+    leaves, treedef = jax.tree_util.tree_flatten(
+        tree, is_leaf=lambda x: isinstance(x, QTensor)
+    )
+    h.update(repr(treedef).encode())
+    for leaf in leaves:
+        h.update(msgpack.packb(_encode(leaf), use_bin_type=True))
+    return h.hexdigest()[:16]

@@ -1,49 +1,238 @@
-"""Activation cache for Parallel Adapters (paper §IV-B, §V-B).
+"""Activation cache for Parallel Adapters (paper §IV-B, §V-B) — v2.
 
-Because the backbone is frozen, the taps ``b_0..b_L`` are invariant per
-input sequence. During epoch 1 the cache captures them; from epoch 2 on
-the backbone forward is skipped entirely and the adapter trains straight
-from the cache (pure data parallelism — paper Fig. 11).
+Because the backbone is frozen, the taps ``b_0..b_L`` and the final
+hidden state ``b_final`` are invariant per input sequence. During epoch 1
+the cache captures them; from epoch 2 on the backbone forward is skipped
+entirely and the adapter trains straight from the cache (pure data
+parallelism — paper Fig. 11).
 
-Storage cost is ``(n_periods + 1) · S · d`` values per sequence (paper's
-``s × h × l`` analysis). The manager enforces a byte budget and spills to
-disk (the paper reloads per micro-batch from embedded flash; here we
-reload ``.npz`` shards, closing each archive handle after the read).
+v2 extends the byte-budgeted RAM/disk store of v1 with the three pieces
+that turn it from a demo into the deployable subsystem the paper costs
+out in §V-B:
+
+* **Compressed entries** — a ``compress=`` policy (``"f32"``, ``"bf16"``,
+  ``"int8"``) applied at ``put`` time. ``bf16`` halves storage with a
+  ≤2⁻⁸ relative error; ``int8`` is the same block-wise absmax scheme the
+  backbone weights use (:mod:`repro.core.quantization`, paper §IV-D /
+  QLoRA), ~3.9× smaller than f32 including scales. The byte budget and
+  all eviction/spill accounting operate on *compressed* bytes.
+* **Async prefetch** — :class:`CachePrefetcher` runs a background thread
+  over the epoch's known batch order (``DataPipeline.epoch_order``),
+  decompressing/loading the *next* batches while the current train step
+  runs, with the host→device transfer started early (double-buffered via
+  a bounded queue).
+* **Cross-run persistence** — ``save_manifest``/``open_persistent``
+  record and validate a manifest (corpus + backbone fingerprints,
+  compression policy) next to the spill files, so a re-run against the
+  same ``--cache-dir`` starts with a warm cache and performs **zero**
+  backbone forwards. A mismatching manifest invalidates loudly and
+  discards the stale entries.
+
+Storage cost is ``(n_periods + 2) · S · d`` values per sequence with
+``b_final`` folded in (the paper's ``s × h × l`` analysis, +1 for the
+final hidden state). Spills are ``.npz`` shards (the paper reloads per
+micro-batch from embedded flash); each archive handle is closed after
+the read.
 """
 
 from __future__ import annotations
 
+import json
 import os
+import queue
+import sys
+import threading
 from dataclasses import dataclass, field
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Iterable, Optional, Sequence, Set, Tuple
 
 import jax
 import jax.numpy as jnp
+import ml_dtypes
 import numpy as np
 
+from repro.core.quantization import QTensor, dequantize, quantize
 
-def cache_bytes_per_sequence(cfg, seq_len: int, dtype_bytes: int = 4) -> int:
-    """Paper §V-B storage analysis: s·h·(l+1) values per sequence."""
-    return (cfg.n_periods + 1) * seq_len * cfg.d_model * dtype_bytes
+COMPRESS_POLICIES = ("f32", "bf16", "int8")
+_INT8_BLOCK = 128
+MANIFEST_NAME = "manifest.json"
+MANIFEST_VERSION = 2
+
+
+def cache_bytes_per_sequence(
+    cfg, seq_len: int, dtype_bytes: float = 4, with_final: bool = False
+) -> int:
+    """Paper §V-B storage analysis: s·h·(l+1) values per sequence.
+
+    ``with_final=True`` adds the ``b_final`` plane that v2 entries fold
+    in (s·h·(l+2)) — what ``--cache-budget-mb`` sizing should use; pass
+    ``policy_bytes_per_value(policy)`` as ``dtype_bytes`` for compressed
+    entries."""
+    planes = cfg.n_periods + (2 if with_final else 1)
+    return int(planes * seq_len * cfg.d_model * dtype_bytes)
+
+
+def policy_bytes_per_value(policy: str, block: int = _INT8_BLOCK) -> float:
+    """Stored bytes per cached value under each compression policy
+    (int8 includes the per-block f32 scale amortised over the block)."""
+    return {"f32": 4.0, "bf16": 2.0, "int8": 1.0 + 4.0 / block}[policy]
+
+
+# ---------------------------------------------------------------------------
+# Compressed tensors / cache entries
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class _CTensor:
+    """One compressed host tensor + enough metadata to invert it.
+
+    f32:  data float32, scale None
+    bf16: data ml_dtypes.bfloat16 (stored as uint16 inside npz shards)
+    int8: data int8 payload, scale f32 per-block absmax/127
+          (exactly ``quantization.quantize(bits=8, block=_INT8_BLOCK)``)
+    """
+
+    policy: str
+    data: np.ndarray
+    scale: Optional[np.ndarray]
+    orig_last: int
+    block: int = 0
+
+    @property
+    def nbytes(self) -> int:
+        return self.data.nbytes + (0 if self.scale is None else self.scale.nbytes)
+
+
+def _compress(x, policy: str, own: bool = False) -> _CTensor:
+    """``own=True`` guarantees the payload owns its buffer: a same-dtype
+    conversion is a no-copy view, and an entry holding a view of e.g. one
+    row of a (B,S,d) batch array would pin the whole batch in RAM — the
+    byte budget would no longer bound real memory."""
+    x = np.asarray(x)
+    if policy in ("f32", "bf16"):
+        target = np.float32 if policy == "f32" else ml_dtypes.bfloat16
+        data = np.asarray(x, target)
+        if own and (data is x or data.base is not None):
+            data = data.copy()
+        return _CTensor(policy, data, None, x.shape[-1])
+    if policy == "int8":
+        qt = quantize(jnp.asarray(x, jnp.float32), bits=8, block=_INT8_BLOCK)
+        return _CTensor(
+            "int8", np.asarray(qt.q), np.asarray(qt.scale), qt.orig_last, qt.block
+        )
+    raise ValueError(f"compress must be one of {COMPRESS_POLICIES}, got {policy!r}")
+
+
+def _ct_index(ct: _CTensor, idx) -> _CTensor:
+    """Slice one sequence out of a batch-compressed tensor. Copies, so the
+    per-sequence entry owns its bytes instead of pinning the batch array.
+    Valid because compression is independent along the last axis (blocks
+    never straddle the sliced leading axes)."""
+    return _CTensor(
+        ct.policy,
+        ct.data[idx].copy(),
+        None if ct.scale is None else ct.scale[idx].copy(),
+        ct.orig_last,
+        ct.block,
+    )
+
+
+def _decompress(ct: _CTensor, dtype=np.float32) -> np.ndarray:
+    """dtype=None returns the storage dtype where it is a real float type
+    (bf16 entries ship compressed to the device; the train step upcasts).
+
+    int8 entries always dequantize on the host to f32 — their H2D
+    transfer is full-width. Shipping q+scale and dequantizing inside the
+    jitted step (as the quantized *weights* do via kernels/quant_matmul)
+    would keep the transfer at integer width; that needs QTensor-aware
+    cached-step shardings and is left to a future PR — the prefetcher
+    hides the host-side dequant cost in the meantime."""
+    if ct.policy in ("f32", "bf16"):
+        return ct.data if dtype is None else np.asarray(ct.data, dtype)
+    qt = QTensor(jnp.asarray(ct.data), jnp.asarray(ct.scale), 8, ct.block, ct.orig_last)
+    out = np.asarray(dequantize(qt))
+    return out if dtype is None else np.asarray(out, dtype)
+
+
+@dataclass
+class CacheEntry:
+    """One sequence's cached activations: (b0, taps[, b_final])."""
+
+    b0: _CTensor
+    taps: _CTensor
+    b_final: Optional[_CTensor] = None
+
+    @property
+    def nbytes(self) -> int:
+        n = self.b0.nbytes + self.taps.nbytes
+        return n + (0 if self.b_final is None else self.b_final.nbytes)
+
+    def parts(self) -> Iterable[Tuple[str, _CTensor]]:
+        yield "b0", self.b0
+        yield "taps", self.taps
+        if self.b_final is not None:
+            yield "bf", self.b_final
+
+
+def _entry_to_npz(entry: CacheEntry) -> Dict[str, np.ndarray]:
+    meta = {}
+    arrays: Dict[str, np.ndarray] = {}
+    for name, ct in entry.parts():
+        meta[name] = {"policy": ct.policy, "orig_last": ct.orig_last, "block": ct.block}
+        arrays[name] = ct.data.view(np.uint16) if ct.policy == "bf16" else ct.data
+        if ct.scale is not None:
+            arrays[name + "_scale"] = ct.scale
+    arrays["meta"] = np.array(json.dumps(meta))
+    return arrays
+
+
+def _entry_from_npz(z) -> CacheEntry:
+    meta = json.loads(str(z["meta"]))
+
+    def part(name: str) -> _CTensor:
+        m = meta[name]
+        data = z[name]
+        if m["policy"] == "bf16":
+            data = data.view(ml_dtypes.bfloat16)
+        scale = z[name + "_scale"] if name + "_scale" in z.files else None
+        return _CTensor(m["policy"], data, scale, m["orig_last"], m["block"])
+
+    return CacheEntry(part("b0"), part("taps"), part("bf") if "bf" in meta else None)
+
+
+# ---------------------------------------------------------------------------
+# The cache manager
+# ---------------------------------------------------------------------------
 
 
 @dataclass
 class ActivationCache:
     """Keyed store of backbone taps.
 
-    Keys are sequence ids (ints). Values are (b0, taps) with shapes
-    (S, d) and (n_periods, S, d) — stored per-sequence so epochs can
-    re-batch/shuffle freely, exactly like the paper's redistribution step.
+    Keys are sequence ids (ints). Values are (b0, taps[, b_final]) with
+    shapes (S, d), (n_periods, S, d) and (S, d) — stored per-sequence so
+    epochs can re-batch/shuffle freely, exactly like the paper's
+    redistribution step. Entries are compressed per ``compress`` at put
+    time; the byte budget covers compressed bytes. All mutating paths
+    hold a lock so :class:`CachePrefetcher` can read from its own thread.
     """
 
     budget_bytes: int = 2 << 30
     spill_dir: Optional[str] = None
-    dtype: np.dtype = np.float32
-    _ram: Dict[int, Tuple[np.ndarray, np.ndarray]] = field(default_factory=dict)
+    compress: str = "f32"
+    _ram: Dict[int, CacheEntry] = field(default_factory=dict)
     _disk: Dict[int, str] = field(default_factory=dict)
+    _final_absent: Set[int] = field(default_factory=set)
     _ram_bytes: int = 0
     hits: int = 0
     misses: int = 0
+    _lock: threading.RLock = field(default_factory=threading.RLock, repr=False)
+
+    def __post_init__(self):
+        if self.compress not in COMPRESS_POLICIES:
+            raise ValueError(
+                f"compress must be one of {COMPRESS_POLICIES}, got {self.compress!r}"
+            )
 
     def __contains__(self, key: int) -> bool:
         return key in self._ram or key in self._disk
@@ -56,23 +245,48 @@ class ActivationCache:
     def nbytes(self) -> int:
         return self._ram_bytes
 
-    def put(self, key: int, b0: np.ndarray, taps: np.ndarray) -> None:
-        b0 = np.asarray(b0, self.dtype)
-        taps = np.asarray(taps, self.dtype)
-        size = b0.nbytes + taps.nbytes
+    def keys(self) -> Set[int]:
+        return self._ram.keys() | self._disk.keys()
+
+    def covers(self, keys, with_final: bool = False) -> bool:
+        """True when every key is resident (RAM or disk) — the gate for
+        running an epoch through the prefetcher instead of the forward."""
+        with self._lock:
+            return all(
+                int(k) in self and not (with_final and int(k) in self._final_absent)
+                for k in keys
+            )
+
+    # -- writes ------------------------------------------------------------
+
+    def put(self, key: int, b0, taps, b_final=None) -> None:
+        entry = CacheEntry(
+            _compress(b0, self.compress, own=True),
+            _compress(taps, self.compress, own=True),
+            None if b_final is None else _compress(b_final, self.compress, own=True),
+        )
+        with self._lock:
+            self._put_entry(key, entry)
+
+    def _put_entry(self, key: int, entry: CacheEntry) -> None:
+        size = entry.nbytes
+        if entry.b_final is None:
+            self._final_absent.add(key)
+        else:
+            self._final_absent.discard(key)
         # re-putting an existing key replaces it: retire the old entry's
         # bytes first, or the budget check double-counts and triggers
         # spurious evictions/spills
         if key in self._ram:
-            a, b = self._ram.pop(key)
-            self._ram_bytes -= a.nbytes + b.nbytes
+            old = self._ram.pop(key)
+            self._ram_bytes -= old.nbytes
         if size > self.budget_bytes:
             # the entry alone exceeds the whole budget — don't flush the
             # hot working set making room that can't suffice: disk is its
             # home, or without a spill_dir it is dropped (one sequence
             # re-forwards later, instead of the whole RAM set)
             if self.spill_dir:
-                self._spill(key, b0, taps)
+                self._spill(key, entry)
             return
         # LRU eviction: the *oldest* RAM entries move to disk, the new
         # entry stays RAM-resident — so under budget pressure the hot
@@ -88,7 +302,7 @@ class ActivationCache:
                 os.remove(path)
             except OSError:
                 pass
-        self._ram[key] = (b0, taps)
+        self._ram[key] = entry
         self._ram_bytes += size
 
     def _evict_until(self, target_bytes: int) -> None:
@@ -96,67 +310,292 @@ class ActivationCache:
         A victim with a clean disk copy (promoted earlier) is dropped for
         free; otherwise it is spilled (or dropped without a spill_dir)."""
         while self._ram and self._ram_bytes > target_bytes:
-            k, (a, b) = next(iter(self._ram.items()))
-            self._ram_bytes -= a.nbytes + b.nbytes
+            k, entry = next(iter(self._ram.items()))
+            self._ram_bytes -= entry.nbytes
             del self._ram[k]
             if self.spill_dir and k not in self._disk:
-                self._spill(k, a, b)
+                self._spill(k, entry)
 
-    def _spill(self, key: int, b0: np.ndarray, taps: np.ndarray) -> None:
+    def _spill(self, key: int, entry: CacheEntry) -> None:
         os.makedirs(self.spill_dir, exist_ok=True)
         path = os.path.join(self.spill_dir, f"act_{key}.npz")
-        np.savez(path, b0=b0, taps=taps)
+        np.savez(path, **_entry_to_npz(entry))
         self._disk[key] = path
 
-    def get(self, key: int) -> Optional[Tuple[np.ndarray, np.ndarray]]:
-        if key in self._ram:
-            self.hits += 1
-            # refresh recency so eviction order tracks access, not just
-            # insertion (dicts iterate in insertion order)
-            entry = self._ram.pop(key)
-            self._ram[key] = entry
-            return entry
-        if key in self._disk:
-            self.hits += 1
-            # npz archives cannot be mmapped; close the zip handle rather
-            # than leaking one file descriptor per disk hit
-            with np.load(self._disk[key]) as z:
-                b0, taps = z["b0"], z["taps"]
-            # promote the hit into RAM, *keeping* the npz as a clean copy:
-            # evicting a promoted entry later is then free (no rewrite), so
-            # the cyclic epoch sweep of a corpus larger than the budget
-            # costs one read per miss — never a write per read
-            size = b0.nbytes + taps.nbytes
-            if size <= self.budget_bytes:
-                self._evict_until(self.budget_bytes - size)
-                self._ram[key] = (b0, taps)
-                self._ram_bytes += size
-            return b0, taps
-        self.misses += 1
-        return None
+    def flush(self) -> None:
+        """Write every RAM entry without a clean disk copy to spill_dir —
+        the persistence barrier before ``save_manifest``."""
+        if not self.spill_dir:
+            raise ValueError("flush() requires a spill_dir")
+        with self._lock:
+            for k, entry in self._ram.items():
+                if k not in self._disk:
+                    self._spill(k, entry)
 
-    def put_batch(self, keys, b0: jax.Array, taps: jax.Array) -> None:
-        """b0: (B,S,d); taps: (n_p,B,S,d) — device arrays from epoch 1."""
-        b0 = np.asarray(b0)
-        taps = np.asarray(taps)
+    # -- reads -------------------------------------------------------------
+
+    def _get_entry(self, key: int, need_final: bool) -> Optional[CacheEntry]:
+        with self._lock:
+            if need_final and key in self._final_absent:
+                # present but incomplete for this request — the caller
+                # re-forwards and re-puts with b_final (replacing the entry)
+                self.misses += 1
+                return None
+            if key in self._ram:
+                self.hits += 1
+                # refresh recency so eviction order tracks access, not just
+                # insertion (dicts iterate in insertion order)
+                entry = self._ram.pop(key)
+                self._ram[key] = entry
+                return entry
+            if key in self._disk:
+                self.hits += 1
+                # npz archives cannot be mmapped; close the zip handle rather
+                # than leaking one file descriptor per disk hit
+                with np.load(self._disk[key]) as z:
+                    entry = _entry_from_npz(z)
+                # promote the hit into RAM, *keeping* the npz as a clean copy:
+                # evicting a promoted entry later is then free (no rewrite), so
+                # the cyclic epoch sweep of a corpus larger than the budget
+                # costs one read per miss — never a write per read
+                size = entry.nbytes
+                if size <= self.budget_bytes:
+                    self._evict_until(self.budget_bytes - size)
+                    self._ram[key] = entry
+                    self._ram_bytes += size
+                return entry
+            self.misses += 1
+            return None
+
+    def get(self, key: int, with_final: bool = False, dtype=np.float32):
+        """Decompressed (b0, taps) — or (b0, taps, b_final) with
+        ``with_final``; None on miss (including an entry stored without
+        b_final when b_final is requested). ``dtype=None`` keeps bf16
+        payloads compressed for the device transfer."""
+        entry = self._get_entry(int(key), need_final=with_final)
+        if entry is None:
+            return None
+        parts = [entry.b0, entry.taps] + ([entry.b_final] if with_final else [])
+        return tuple(_decompress(ct, dtype) for ct in parts)
+
+    def put_batch(self, keys, b0: jax.Array, taps: jax.Array, b_final=None) -> None:
+        """b0: (B,S,d); taps: (n_p,B,S,d); b_final: (B,S,d) — device
+        arrays from epoch 1 (one device→host gather each, not B).
+
+        Compression runs once on the whole batch array and per-sequence
+        entries are sliced (with copies) out of the result — block-wise
+        quantization along the last axis makes the payloads bit-identical
+        to per-sequence compression at 1/B the dispatch overhead."""
+        cb0 = _compress(np.asarray(b0), self.compress)
+        ctaps = _compress(np.asarray(taps), self.compress)
+        cbf = None if b_final is None else _compress(np.asarray(b_final), self.compress)
         for i, k in enumerate(keys):
-            self.put(int(k), b0[i], taps[:, i])
+            entry = CacheEntry(
+                _ct_index(cb0, i),
+                _ct_index(ctaps, (slice(None), i)),
+                None if cbf is None else _ct_index(cbf, i),
+            )
+            with self._lock:
+                self._put_entry(int(k), entry)
 
-    def get_batch(self, keys) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+    def get_batch(self, keys, with_final: bool = False, dtype=np.float32):
         """Reassemble a training batch from cached sequences."""
-        items = [self.get(int(k)) for k in keys]
+        items = [self.get(int(k), with_final=with_final, dtype=dtype) for k in keys]
         if any(it is None for it in items):
             return None
         b0 = np.stack([it[0] for it in items], axis=0)  # (B,S,d)
         taps = np.stack([it[1] for it in items], axis=1)  # (n_p,B,S,d)
-        return b0, taps
+        if not with_final:
+            return b0, taps
+        bf = np.stack([it[2] for it in items], axis=0)  # (B,S,d)
+        return b0, taps, bf
 
     def clear(self) -> None:
-        for path in self._disk.values():
+        with self._lock:
+            for path in self._disk.values():
+                try:
+                    os.remove(path)
+                except OSError:
+                    pass
+            self._ram.clear()
+            self._disk.clear()
+            self._final_absent.clear()
+            self._ram_bytes = 0
+
+    # -- cross-run persistence ---------------------------------------------
+
+    def save_manifest(self, meta: dict) -> str:
+        """Flush all entries to spill_dir and write the manifest that lets
+        a later run resume warm (``open_persistent``). ``meta`` is the
+        caller's identity record — corpus/backbone fingerprints,
+        compression policy knobs — compared verbatim on reopen."""
+        self.flush()
+        with self._lock:
+            entries = {
+                str(k): {
+                    "file": os.path.basename(self._disk[k]),
+                    "has_final": k not in self._final_absent,
+                }
+                for k in sorted(self.keys())
+            }
+            manifest = {
+                "version": MANIFEST_VERSION,
+                "compress": self.compress,
+                "meta": meta,
+                "entries": entries,
+            }
+            path = os.path.join(self.spill_dir, MANIFEST_NAME)
+            tmp = path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(manifest, f, indent=1, sort_keys=True)
+            os.replace(tmp, path)
+            return path
+
+
+def _invalidate(cache_dir: str, reason: str) -> None:
+    print(
+        f"ACTIVATION CACHE INVALIDATED at {cache_dir}: {reason} — discarding "
+        f"cached entries; epoch 1 will re-run the backbone forward",
+        file=sys.stderr,
+    )
+    for name in os.listdir(cache_dir):
+        if name == MANIFEST_NAME or (name.startswith("act_") and name.endswith(".npz")):
             try:
-                os.remove(path)
+                os.remove(os.path.join(cache_dir, name))
             except OSError:
                 pass
-        self._ram.clear()
-        self._disk.clear()
-        self._ram_bytes = 0
+
+
+def open_persistent(
+    cache_dir: str,
+    meta: dict,
+    *,
+    budget_bytes: int = 2 << 30,
+    compress: str = "f32",
+) -> Tuple[ActivationCache, bool]:
+    """Open (or create) a persistent cache at ``cache_dir``.
+
+    Returns ``(cache, warm)``. ``warm`` is True iff a manifest exists and
+    validates against ``meta`` + ``compress`` with every entry file
+    present — the cache's disk index is then pre-populated and an epoch
+    over the manifest's keys performs zero backbone forwards. Any
+    mismatch invalidates loudly (stderr) and removes the stale entries.
+    """
+    cache = ActivationCache(
+        budget_bytes=budget_bytes, spill_dir=cache_dir, compress=compress
+    )
+    path = os.path.join(cache_dir, MANIFEST_NAME)
+    if not os.path.exists(path):
+        return cache, False
+    try:
+        with open(path) as f:
+            m = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        _invalidate(cache_dir, f"unreadable manifest ({e})")
+        return cache, False
+    if m.get("version") != MANIFEST_VERSION:
+        _invalidate(cache_dir, f"manifest version {m.get('version')} != {MANIFEST_VERSION}")
+        return cache, False
+    if m.get("compress") != compress:
+        _invalidate(
+            cache_dir, f"compression policy changed ({m.get('compress')} -> {compress})"
+        )
+        return cache, False
+    if m.get("meta") != meta:
+        changed = sorted(
+            k
+            for k in set(m.get("meta", {})) | set(meta)
+            if m.get("meta", {}).get(k) != meta.get(k)
+        )
+        _invalidate(cache_dir, f"meta mismatch on {changed}")
+        return cache, False
+    entries = m.get("entries", {})
+    files = {k: os.path.join(cache_dir, v["file"]) for k, v in entries.items()}
+    missing = [k for k, p in files.items() if not os.path.exists(p)]
+    if missing:
+        _invalidate(cache_dir, f"{len(missing)} entry file(s) missing")
+        return cache, False
+    for k, v in entries.items():
+        cache._disk[int(k)] = files[k]
+        if not v.get("has_final", False):
+            cache._final_absent.add(int(k))
+    return cache, True
+
+
+# ---------------------------------------------------------------------------
+# Async prefetch
+# ---------------------------------------------------------------------------
+
+
+class CachePrefetcher:
+    """Background loader for cached epochs (paper Fig. 11's pure-DP phase).
+
+    Iterates the epoch's known batch order (``DataPipeline.epoch_order``)
+    on a daemon thread, so npz reads and dequantisation of batch *k+1*
+    overlap train step *k*. With ``to_device=True`` the worker also calls
+    ``jax.device_put``, starting the host→device copy early; the bounded
+    queue (``depth``, default 2) double-buffers: one batch in flight
+    while one is being consumed, and the thread blocks rather than
+    loading the whole epoch ahead.
+
+    Yields one ``(b0, taps[, b_final])`` tuple per key-batch, in order —
+    or ``None`` for a batch with a missing key (the consumer falls back
+    to the forward path). While a prefetcher is draining, the owning
+    thread must not mutate the cache except via ``put`` (both sides take
+    the cache lock).
+    """
+
+    _DONE = object()
+
+    def __init__(
+        self,
+        cache: ActivationCache,
+        key_batches: Sequence[np.ndarray],
+        *,
+        with_final: bool = True,
+        depth: int = 2,
+        to_device: bool = True,
+        dtype=np.float32,
+    ):
+        self._cache = cache
+        self._key_batches = list(key_batches)
+        self._with_final = with_final
+        self._to_device = to_device
+        self._dtype = dtype
+        self._q: queue.Queue = queue.Queue(maxsize=max(1, depth))
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(
+            target=self._worker, name="activation-cache-prefetch", daemon=True
+        )
+        self._thread.start()
+
+    def _worker(self) -> None:
+        try:
+            for keys in self._key_batches:
+                got = self._cache.get_batch(
+                    keys, with_final=self._with_final, dtype=self._dtype
+                )
+                if got is not None and self._to_device:
+                    got = tuple(jax.device_put(g) for g in got)
+                self._q.put(got)
+        except BaseException as e:  # surfaced on the consumer side
+            self._err = e
+        finally:
+            self._q.put(self._DONE)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is self._DONE:
+            if self._err is not None:
+                raise self._err
+            raise StopIteration
+        return item
+
+    def close(self) -> None:
+        """Drain and join (for early exit; normal exhaustion joins too)."""
+        while next(self, self._DONE) is not self._DONE:
+            pass
+        self._thread.join(timeout=30)

@@ -22,6 +22,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 
 @jax.tree_util.register_pytree_node_class
 class QTensor:
@@ -118,21 +120,45 @@ def _is_qtensor(x: Any) -> bool:
     return isinstance(x, QTensor)
 
 
-def _should_quantize(x: Any) -> bool:
-    # quantize real weight matrices; skip norms/gates/scales (1-D) and
-    # anything deliberately kept f32 (routers are quantization-sensitive).
-    return isinstance(x, (jax.Array, jax.ShapeDtypeStruct)) and x.ndim >= 2 and x.size >= 4096
+# leaves whose pytree path has a component containing one of these
+# substrings stay full-precision no matter their size: MoE routers are
+# quantization-sensitive — a few
+# mis-rounded logits flip top-k expert assignments outright, a much larger
+# error than any dense matmul suffers (cf. QLoRA keeping norms in f32)
+QUANT_SKIP_NAMES = ("router",)
 
 
-def quantize_tree(tree, bits: int = 8, block: int = 128, min_size: int = 4096):
-    """Quantize every large weight leaf; leave small/1-D leaves untouched."""
+def _path_names(path) -> list:
+    names = []
+    for k in path:
+        for attr in ("key", "name", "idx"):
+            if hasattr(k, attr):
+                names.append(str(getattr(k, attr)))
+                break
+    return names
 
-    def f(x):
+
+def quantize_tree(
+    tree, bits: int = 8, block: int = 128, min_size: int = 4096,
+    skip_names=QUANT_SKIP_NAMES,
+):
+    """Quantize every large weight leaf; leave small/1-D leaves untouched.
+
+    Leaves whose path has a component *containing* any ``skip_names``
+    substring keep their dtype — by default anything router-like
+    ("router", "moe_router", "router_w", ...; see QUANT_SKIP_NAMES)."""
+    if isinstance(skip_names, str):  # a bare string is one name, not chars
+        skip_names = (skip_names,)
+    skip_names = tuple(skip_names)
+
+    def f(path, x):
+        if any(s in n for n in _path_names(path) for s in skip_names):
+            return x
         if isinstance(x, jax.Array) and x.ndim >= 2 and x.size >= min_size:
             return quantize(x, bits, block)
         return x
 
-    return jax.tree.map(f, tree)
+    return compat.tree_map_with_path(f, tree)
 
 
 def maybe_dequantize_tree(tree, dtype=jnp.float32):

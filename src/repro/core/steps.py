@@ -92,6 +92,10 @@ def pac_cached_train_step(
     of the backbone can be released from memory (paper §IV-B memory win).
     """
     b0, taps, b_final = cached_batch["b0"], cached_batch["taps"], cached_batch["b_final"]
+    # cached entries may arrive in their storage dtype — the bf16 cache
+    # policy ships compressed tensors to the device (half the H2D bytes)
+    # and upcasts here; f32 entries make this a no-op
+    b0, taps, b_final = (x.astype(jnp.float32) for x in (b0, taps, b_final))
     B, S = b0.shape[:2]
     if "positions" in cached_batch:
         positions = cached_batch["positions"]

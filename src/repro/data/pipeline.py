@@ -86,14 +86,30 @@ class DataPipeline:
     seed: int = 0
     drop_remainder: bool = True
 
-    def epoch(self, epoch_idx: int) -> Iterator[dict]:
+    def _order(self, epoch_idx: int) -> np.ndarray:
         n = len(self.corpus)
         order = np.arange(n)
         if self.shuffle:
             np.random.default_rng(self.seed + epoch_idx).shuffle(order)
         end = n - (n % self.global_batch) if self.drop_remainder else n
-        for i in range(0, end, self.global_batch):
+        return order[:end]
+
+    def epoch(self, epoch_idx: int) -> Iterator[dict]:
+        order = self._order(epoch_idx)
+        for i in range(0, len(order), self.global_batch):
             yield self.corpus.batch(order[i : i + self.global_batch])
+
+    def epoch_order(self, epoch_idx: int) -> list:
+        """Per-batch sequence-id arrays for ``epoch_idx``, without
+        materializing token batches — the known batch order that feeds
+        the activation cache's :class:`~repro.core.activation_cache.
+        CachePrefetcher` (ids here are exactly the ``seq_ids`` the
+        matching :meth:`epoch` iteration yields, in the same order)."""
+        order = self._order(epoch_idx)
+        return [
+            order[i : i + self.global_batch].astype(np.int32)
+            for i in range(0, len(order), self.global_batch)
+        ]
 
     def steps_per_epoch(self) -> int:
         return len(self.corpus) // self.global_batch

@@ -7,7 +7,8 @@ HBM round-trip. This op runs once per layer per step in the PAC+ forward
 (and its transpose pattern in the adapter backward), so on a
 bandwidth-bound chip the saved traffic is ``2 · T · d/r · 4B`` per layer.
 
-Grid: (T/bt, da/bj, d/bk), K innermost with an f32 accumulator scratch.
+Grid: (T/bt, da/bj, d/bk) over block-padded dims (ragged shapes are
+zero-padded and sliced), K innermost with an f32 accumulator scratch.
 """
 
 from __future__ import annotations
@@ -56,13 +57,22 @@ def adapter_fuse(
     T, d = b.shape
     da = w_down.shape[1]
     bt, bj, bk = min(bt, T), min(bj, da), min(bk, d)
-    assert T % bt == 0 and da % bj == 0 and d % bk == 0, (T, da, d, bt, bj, bk)
-    n_k = d // bk
+    # ragged shapes (e.g. --seq 100): pad every dim up to its block
+    # multiple. Zero K-padding contributes nothing to the accumulator;
+    # the padded rows/cols see the λ-mix epilogue over zeros, and the
+    # final slice masks them out of the result.
+    Tp, dap, dp = -(-T // bt) * bt, -(-da // bj) * bj, -(-d // bk) * bk
+    padded = (Tp, dap, dp) != (T, da, d)
+    if padded:
+        b = jnp.pad(b, ((0, Tp - T), (0, dp - d)))
+        w_down = jnp.pad(w_down, ((0, dp - d), (0, dap - da)))
+        a = jnp.pad(a, ((0, Tp - T), (0, dap - da)))
+    n_k = dp // bk
     lam = jnp.asarray(lam, jnp.float32).reshape(1)
 
-    return pl.pallas_call(
+    out = pl.pallas_call(
         functools.partial(_kernel, n_k=n_k),
-        grid=(T // bt, da // bj, n_k),
+        grid=(Tp // bt, dap // bj, n_k),
         in_specs=[
             pl.BlockSpec((bt, bk), lambda i, j, k: (i, k)),
             pl.BlockSpec((bk, bj), lambda i, j, k: (k, j)),
@@ -70,7 +80,8 @@ def adapter_fuse(
             pl.BlockSpec(memory_space=pltpu.SMEM),
         ],
         out_specs=pl.BlockSpec((bt, bj), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((T, da), b.dtype),
+        out_shape=jax.ShapeDtypeStruct((Tp, dap), b.dtype),
         scratch_shapes=[pltpu.VMEM((bt, bj), jnp.float32)],
         interpret=interpret,
     )(b, w_down, a, lam)
+    return out[:T, :da] if padded else out

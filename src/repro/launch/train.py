@@ -19,6 +19,17 @@ same path CI exercises on every PR.
     # hybrid DP×PP on an emulated 4-device mesh
     PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
         --reduced --dp 2 --stages 2 --epochs 3 --batch 4 --seq 32
+
+With ``--cache-dir`` the activation cache persists across runs: the
+first run captures (compressed per ``--cache-compress``) entries and
+writes a manifest fingerprinting the backbone + corpus; a second run
+against the same dir validates the manifest and performs **zero**
+backbone forwards — every epoch, including the first, trains straight
+from the cache. Any change to the backbone (seed, quantization), the
+corpus, or the compression policy invalidates the cache loudly.
+
+    PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
+        --reduced --cache-dir act_cache --cache-compress int8
 """
 
 from __future__ import annotations
@@ -45,6 +56,13 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--init", default="pruning", choices=["pruning", "random"])
     ap.add_argument("--no-cache", action="store_true")
+    ap.add_argument("--cache-dir", default=None,
+                    help="persist the activation cache here; a later run against "
+                         "the same dir resumes warm (zero backbone forwards)")
+    ap.add_argument("--cache-compress", default="f32", choices=["f32", "bf16", "int8"],
+                    help="activation-cache entry compression policy")
+    ap.add_argument("--cache-budget-mb", type=int, default=4096,
+                    help="RAM budget for cache entries (compressed bytes)")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--dp", type=int, default=1, help="data-parallel mesh axis")
@@ -62,10 +80,14 @@ def main() -> None:
     import jax  # noqa: E402 — after the device-count knob
     import jax.numpy as jnp
 
-    from repro.checkpoint import save_checkpoint
+    from repro.checkpoint import save_checkpoint, tree_fingerprint
     from repro.configs import get_arch
     from repro.core import steps
-    from repro.core.activation_cache import ActivationCache
+    from repro.core.activation_cache import (
+        ActivationCache,
+        CachePrefetcher,
+        open_persistent,
+    )
     from repro.core.init_methods import pruning_init
     from repro.core.parallel_adapters import init_adapter
     from repro.core.planner import (
@@ -136,8 +158,32 @@ def main() -> None:
     n_seq = args.steps_per_epoch * args.batch
     corpus = SyntheticPersonalCorpus(cfg.vocab, args.seq + 1, n_seq, seed=args.seed)
     pipe = DataPipeline(corpus, global_batch=args.batch, shuffle=True, seed=args.seed)
-    cache = ActivationCache(budget_bytes=4 << 30)
-    bfinal_cache = {}
+
+    # activation cache v2: compressed entries (b0 + taps + b_final folded
+    # into one budgeted entry), optionally persistent across runs
+    cache_budget = args.cache_budget_mb << 20
+    meta = None
+    if args.cache_dir and not args.no_cache:
+        # the manifest identity: any change to the backbone weights (seed,
+        # quantization), the corpus, or the shapes invalidates the cache
+        meta = {
+            "arch": cfg.name,
+            "reduced": bool(args.reduced),
+            "seq": args.seq,
+            "quant": args.quant or 0,
+            "backbone": tree_fingerprint(bq),
+            "corpus": tree_fingerprint(corpus.tokens),
+        }
+        cache, warm = open_persistent(
+            args.cache_dir, meta, budget_bytes=cache_budget,
+            compress=args.cache_compress)
+        if warm:
+            print(f"activation cache: warm manifest at {args.cache_dir} "
+                  f"({len(cache)} seqs, {args.cache_compress}) — cached epochs "
+                  f"skip the backbone forward entirely")
+    else:
+        cache = ActivationCache(budget_bytes=cache_budget,
+                                compress=args.cache_compress)
 
     step1 = jax.jit(functools.partial(steps.pac_train_step, cfg=cfg, r=args.r, lr=args.lr))
     stepN = jax.jit(functools.partial(steps.pac_cached_train_step, cfg=cfg, r=args.r, lr=args.lr))
@@ -152,23 +198,34 @@ def main() -> None:
         t0 = time.time()
         losses = []
         used_cache = False
+        prefetch = None
+        if not args.no_cache:
+            order = pipe.epoch_order(epoch)
+            if order and cache.covers(np.concatenate(order), with_final=True):
+                # the whole epoch is resident: a background thread
+                # decompresses/loads batch k+1 (and starts its
+                # host→device copy) while step k runs
+                prefetch = CachePrefetcher(
+                    cache, order, to_device=not distributed, dtype=None)
         for batch in pipe.epoch(epoch):
             ids = batch.pop("seq_ids")
-            hit = None if args.no_cache else cache.get_batch(ids)
+            if prefetch is not None:
+                hit = next(prefetch)
+            elif args.no_cache:
+                hit = None
+            else:
+                hit = cache.get_batch(ids, with_final=True, dtype=None)
             if hit is None:
                 loss, adapter, opt, (b0, taps, bf) = step1(bq, adapter, opt, batch)
                 if not args.no_cache:
-                    cache.put_batch(ids, b0, taps)
-                    bf_np = np.asarray(bf)  # one device→host gather, not B
-                    for i, k in enumerate(ids):
-                        bfinal_cache[int(k)] = bf_np[i]
+                    cache.put_batch(ids, b0, taps, bf)
             else:
                 used_cache = True
-                b0, taps = hit
+                b0, taps, bf = hit
                 cached = {
                     "b0": jnp.asarray(b0),
                     "taps": jnp.asarray(taps),
-                    "b_final": jnp.asarray(np.stack([bfinal_cache[int(k)] for k in ids])),
+                    "b_final": jnp.asarray(bf),
                     "labels": batch["labels"],
                 }
                 if stepN is None:  # epoch≥2 distributed: *pure* DP over the mesh
@@ -187,12 +244,17 @@ def main() -> None:
         else:
             mode = "full"
         print(f"epoch {epoch}: loss={np.mean(losses):.4f} time={dt:.1f}s ({mode}) "
-              f"cache[{len(cache)} seqs, {cache.nbytes/2**20:.0f} MB]")
+              f"cache[{len(cache)} seqs, {cache.nbytes/2**20:.0f} MB, "
+              f"{args.cache_compress}]")
 
     if args.ckpt:
         n = save_checkpoint(args.ckpt, {"adapter": adapter, "config": cfg.name})
         print(f"checkpoint: {args.ckpt} ({n/2**20:.1f} MB)")
-    cache.clear()
+    if meta is not None:
+        path = cache.save_manifest(meta)
+        print(f"cache manifest: {path} ({len(cache)} seqs, {args.cache_compress})")
+    else:
+        cache.clear()
 
 
 if __name__ == "__main__":

@@ -1,11 +1,21 @@
-"""Regression tests for ActivationCache byte accounting and fd hygiene."""
+"""Regression tests for ActivationCache byte accounting and fd hygiene,
+plus the v2 surface: compressed entries, folded b_final, async prefetch,
+and cross-run persistence."""
 
 import os
+import time
 
 import numpy as np
 import pytest
 
-from repro.core.activation_cache import ActivationCache
+from repro.core.activation_cache import (
+    ActivationCache,
+    CachePrefetcher,
+    MANIFEST_NAME,
+    cache_bytes_per_sequence,
+    open_persistent,
+    policy_bytes_per_value,
+)
 
 
 def _entry(seed, S=8, d=4, n_p=2):
@@ -221,3 +231,304 @@ def test_disk_hit_survives_spill_file_rewrite(tmp_path):
     got = cache.get(9)
     np.testing.assert_array_equal(got[0], b0)
     np.testing.assert_array_equal(got[1], taps)
+
+
+# ---------------------------------------------------------------------------
+# v2: compressed entries + folded b_final
+# ---------------------------------------------------------------------------
+
+
+def _entry_f(seed, S=8, d=256, n_p=2):
+    rng = np.random.RandomState(seed)
+    return (
+        rng.randn(S, d).astype(np.float32),
+        rng.randn(n_p, S, d).astype(np.float32),
+        rng.randn(S, d).astype(np.float32),
+    )
+
+
+@pytest.mark.parametrize("policy", ["f32", "bf16", "int8"])
+def test_policy_roundtrip_tolerance(policy):
+    """f32 exact; bf16 within 2^-8 relative; int8 within the blockwise
+    absmax/127 half-step bound (same scheme as the weight quantizer)."""
+    cache = ActivationCache(budget_bytes=1 << 24, compress=policy)
+    b0, taps, bf = _entry_f(0)
+    cache.put(1, b0, taps, bf)
+    got = cache.get(1, with_final=True)
+    for ref, out in zip((b0, taps, bf), got):
+        assert out.shape == ref.shape and out.dtype == np.float32
+        if policy == "f32":
+            np.testing.assert_array_equal(out, ref)
+        elif policy == "bf16":
+            assert np.max(np.abs(out - ref)) <= 2.0**-8 * np.max(np.abs(ref)) + 1e-6
+        else:
+            bound = np.max(np.abs(ref)) / 127 * 0.51 + 1e-6
+            assert np.max(np.abs(out - ref)) <= bound
+
+
+def test_invalid_policy_rejected():
+    with pytest.raises(ValueError):
+        ActivationCache(compress="fp8")
+
+
+def test_compressed_nbytes_budget_accounting():
+    """The budget covers *compressed* bytes: int8 ≥3x smaller than f32,
+    bf16 exactly half (scale overhead included for int8)."""
+    sizes = {}
+    for policy in ("f32", "bf16", "int8"):
+        cache = ActivationCache(budget_bytes=1 << 24, compress=policy)
+        cache.put(1, *_entry_f(0))
+        sizes[policy] = cache.nbytes
+    assert sizes["bf16"] * 2 == sizes["f32"]
+    assert sizes["int8"] * 3 < sizes["f32"]
+    # and the analytic per-value model matches the measured bytes
+    n_values = sum(a.size for a in _entry_f(0))
+    for policy, nb in sizes.items():
+        assert nb == pytest.approx(n_values * policy_bytes_per_value(policy), rel=0.01)
+
+
+def test_b_final_folded_into_entry_accounting():
+    """b_final rides in the same budgeted entry as b0/taps (ISSUE 3: the
+    trainer's former side dict was unbudgeted and never spilled)."""
+    cache = ActivationCache(budget_bytes=1 << 24)
+    b0, taps, bf = _entry_f(0)
+    cache.put(1, b0, taps)
+    without = cache.nbytes
+    cache.put(1, b0, taps, bf)
+    assert cache.nbytes == without + bf.nbytes
+
+
+def test_with_final_miss_when_entry_lacks_it():
+    cache = ActivationCache(budget_bytes=1 << 24)
+    b0, taps, bf = _entry_f(0)
+    cache.put(1, b0, taps)  # legacy two-part entry
+    assert cache.get(1) is not None
+    assert cache.get(1, with_final=True) is None  # incomplete -> miss
+    assert cache.misses == 1
+    cache.put(1, b0, taps, bf)  # re-put replaces with the full entry
+    got = cache.get(1, with_final=True)
+    np.testing.assert_array_equal(got[2], bf)
+
+
+@pytest.mark.parametrize("policy", ["f32", "bf16", "int8"])
+def test_policy_spill_roundtrip_bit_exact(policy, tmp_path):
+    """Disk round-trip preserves the *compressed* payload bit-exactly:
+    RAM-served and npz-served reads decompress identically."""
+    cache = ActivationCache(budget_bytes=1 << 24, compress=policy,
+                            spill_dir=str(tmp_path))
+    b0, taps, bf = _entry_f(3)
+    cache.put(7, b0, taps, bf)
+    from_ram = cache.get(7, with_final=True)
+    cache.flush()
+    cache._ram.clear()
+    cache._ram_bytes = 0
+    from_disk = cache.get(7, with_final=True)
+    for a, b in zip(from_ram, from_disk):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_get_batch_with_final_and_raw_dtype():
+    cache = ActivationCache(budget_bytes=1 << 24, compress="bf16")
+    b0 = np.random.RandomState(0).randn(4, 8, 32).astype(np.float32)
+    taps = np.random.RandomState(1).randn(2, 4, 8, 32).astype(np.float32)
+    bf = np.random.RandomState(2).randn(4, 8, 32).astype(np.float32)
+    cache.put_batch([0, 1, 2, 3], b0, taps, bf)
+    got = cache.get_batch([2, 0], with_final=True)
+    assert got[0].shape == (2, 8, 32) and got[1].shape == (2, 2, 8, 32)
+    assert all(g.dtype == np.float32 for g in got)
+    # dtype=None ships bf16 payloads raw (half the host->device bytes);
+    # the cached train step upcasts on device
+    raw = cache.get_batch([2, 0], with_final=True, dtype=None)
+    import ml_dtypes
+
+    assert all(g.dtype == ml_dtypes.bfloat16 for g in raw)
+    np.testing.assert_array_equal(
+        np.asarray(raw[0], np.float32), got[0]
+    )
+
+
+# ---------------------------------------------------------------------------
+# v2: async prefetch
+# ---------------------------------------------------------------------------
+
+
+def _filled_cache(n=8, spill_dir=None, budget=1 << 24):
+    cache = ActivationCache(budget_bytes=budget, spill_dir=spill_dir)
+    for k in range(n):
+        cache.put(k, *_entry_f(k, d=32))
+    return cache
+
+
+def test_prefetcher_matches_sync_reads(tmp_path):
+    """The prefetcher yields exactly what synchronous get_batch returns,
+    in batch order — including entries that must come off disk."""
+    one = sum(a.nbytes for a in _entry_f(0, d=32))
+    cache = _filled_cache(8, spill_dir=str(tmp_path), budget=3 * one)
+    order = [np.array([0, 5]), np.array([2, 7]), np.array([4, 1]), np.array([6, 3])]
+    want = [cache.get_batch(keys, with_final=True) for keys in order]
+    got = list(CachePrefetcher(cache, order, to_device=False))
+    assert len(got) == len(want)
+    for w, g in zip(want, got):
+        for a, b in zip(w, g):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_prefetcher_device_put_yields_jax_arrays():
+    import jax
+
+    cache = _filled_cache(4)
+    order = [np.array([0, 1]), np.array([2, 3])]
+    got = list(CachePrefetcher(cache, order, to_device=True))
+    assert all(isinstance(part, jax.Array) for batch in got for part in batch)
+
+
+def test_prefetcher_bounded_queue_blocks_ahead():
+    """depth=1 must not race through the whole epoch before consumption —
+    the worker blocks on the bounded queue (double-buffering, not
+    load-everything)."""
+    cache = _filled_cache(8)
+    order = [np.array([k]) for k in range(8)]
+    pf = CachePrefetcher(cache, order, to_device=False, depth=1)
+    deadline = time.time() + 5
+    while pf._q.qsize() < 1 and time.time() < deadline:
+        time.sleep(0.01)
+    time.sleep(0.05)  # give the worker a chance to (wrongly) run ahead
+    # at most depth items buffered + one blocked in-flight inside put()
+    assert pf._q.qsize() <= 2
+    assert len(list(pf)) == 8  # and draining still yields everything
+
+
+def test_prefetcher_yields_none_on_missing_key():
+    cache = _filled_cache(2)
+    order = [np.array([0]), np.array([99]), np.array([1])]
+    got = list(CachePrefetcher(cache, order, to_device=False))
+    assert got[1] is None
+    assert got[0] is not None and got[2] is not None
+
+
+# ---------------------------------------------------------------------------
+# v2: cross-run persistence
+# ---------------------------------------------------------------------------
+
+
+_META = {"backbone": "abc123", "corpus": "def456", "seq": 16}
+
+
+def test_persistence_warm_reopen(tmp_path):
+    cache, warm = open_persistent(str(tmp_path), _META, compress="int8")
+    assert not warm
+    b0, taps, bf = _entry_f(0)
+    cache.put(3, b0, taps, bf)
+    cache.put(5, b0, taps, bf)
+    cache.save_manifest(_META)
+    assert (tmp_path / MANIFEST_NAME).exists()
+
+    cache2, warm2 = open_persistent(str(tmp_path), _META, compress="int8")
+    assert warm2
+    assert cache2.covers([3, 5], with_final=True)
+    got = cache2.get(3, with_final=True)
+    ref = cache.get(3, with_final=True)
+    for a, b in zip(got, ref):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_persistence_meta_mismatch_invalidates(tmp_path, capsys):
+    cache, _ = open_persistent(str(tmp_path), _META)
+    cache.put(1, *_entry_f(0))
+    cache.save_manifest(_META)
+    changed = dict(_META, backbone="zzz")
+    cache2, warm = open_persistent(str(tmp_path), changed)
+    assert not warm
+    assert "INVALIDATED" in capsys.readouterr().err
+    # stale entries and manifest are gone; a fresh save works
+    assert not (tmp_path / MANIFEST_NAME).exists()
+    assert not list(tmp_path.glob("act_*.npz"))
+
+
+def test_persistence_policy_change_invalidates(tmp_path):
+    cache, _ = open_persistent(str(tmp_path), _META, compress="f32")
+    cache.put(1, *_entry_f(0))
+    cache.save_manifest(_META)
+    _, warm = open_persistent(str(tmp_path), _META, compress="bf16")
+    assert not warm
+
+
+def test_persistence_missing_entry_file_invalidates(tmp_path):
+    cache, _ = open_persistent(str(tmp_path), _META)
+    cache.put(1, *_entry_f(0))
+    cache.put(2, *_entry_f(1))
+    cache.save_manifest(_META)
+    os.remove(str(tmp_path / "act_2.npz"))
+    _, warm = open_persistent(str(tmp_path), _META)
+    assert not warm
+
+
+def test_persistence_records_final_absence(tmp_path):
+    """Entries saved without b_final reopen as covers(with_final)=False,
+    so a warm trainer knows it must re-forward them."""
+    cache, _ = open_persistent(str(tmp_path), _META)
+    b0, taps, bf = _entry_f(0)
+    cache.put(1, b0, taps)  # no b_final
+    cache.put(2, b0, taps, bf)
+    cache.save_manifest(_META)
+    cache2, warm = open_persistent(str(tmp_path), _META)
+    assert warm
+    assert cache2.covers([1, 2])
+    assert cache2.covers([2], with_final=True)
+    assert not cache2.covers([1, 2], with_final=True)
+
+
+def test_entries_do_not_alias_the_batch_array():
+    """A per-sequence entry must own its bytes: an f32 view of one row
+    would pin the entire (n_p,B,S,d) batch array in RAM, making the byte
+    budget meaningless (code-review regression)."""
+    cache = ActivationCache(budget_bytes=1 << 24, compress="f32")
+    B = 4
+    b0 = np.random.RandomState(0).randn(B, 8, 32).astype(np.float32)
+    taps = np.random.RandomState(1).randn(2, B, 8, 32).astype(np.float32)
+    bf = np.random.RandomState(2).randn(B, 8, 32).astype(np.float32)
+    cache.put_batch(list(range(B)), b0, taps, bf)
+    for entry in cache._ram.values():
+        for _, ct in entry.parts():
+            assert ct.data.base is None, "entry payload is a view"
+            assert not np.shares_memory(ct.data, taps)
+            assert not np.shares_memory(ct.data, b0)
+    # the single-sequence path owns its buffer too
+    cache.put(99, b0[0], taps[:, 0], bf[0])
+    for _, ct in cache._ram[99].parts():
+        assert not np.shares_memory(ct.data, taps)
+        assert not np.shares_memory(ct.data, b0)
+
+
+@pytest.mark.parametrize("policy", ["f32", "bf16", "int8"])
+def test_put_batch_matches_per_sequence_puts(policy):
+    """Batch-level compression + slicing must be bit-identical to
+    compressing each sequence separately (blocks run along the last
+    axis, so they never straddle the sliced dims)."""
+    B = 3
+    b0 = np.random.RandomState(0).randn(B, 8, 200).astype(np.float32)
+    taps = np.random.RandomState(1).randn(2, B, 8, 200).astype(np.float32)
+    bf = np.random.RandomState(2).randn(B, 8, 200).astype(np.float32)
+    batched = ActivationCache(budget_bytes=1 << 26, compress=policy)
+    batched.put_batch(list(range(B)), b0, taps, bf)
+    single = ActivationCache(budget_bytes=1 << 26, compress=policy)
+    for i in range(B):
+        single.put(i, b0[i], taps[:, i], bf[i])
+    assert batched.nbytes == single.nbytes
+    for i in range(B):
+        for a, b in zip(
+            batched.get(i, with_final=True), single.get(i, with_final=True)
+        ):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_cache_bytes_per_sequence_with_final():
+    from repro.configs import get_arch
+
+    cfg = get_arch("t5-base-pac")
+    base = cache_bytes_per_sequence(cfg, 30)
+    assert base == (cfg.n_periods + 1) * 30 * cfg.d_model * 4  # paper formula
+    v2 = cache_bytes_per_sequence(
+        cfg, 30, policy_bytes_per_value("int8"), with_final=True
+    )
+    assert v2 == int((cfg.n_periods + 2) * 30 * cfg.d_model * policy_bytes_per_value("int8"))

@@ -1,0 +1,67 @@
+"""Cross-run activation-cache persistence through the trainer CLI.
+
+ISSUE 3 acceptance: a second ``repro.launch.train`` run pointed at the
+same ``--cache-dir`` performs **zero** backbone forwards (its epoch 0
+already logs ``cached`` mode), and a changed backbone/corpus seed
+invalidates the manifest loudly and re-captures.
+
+Each run is a subprocess (fresh JAX backend); the persistent compile
+cache set up by conftest keeps the repeated jits cheap.
+"""
+
+import os
+import subprocess
+import sys
+
+
+def _run(tmpdir, *extra, epochs=2, compress="int8"):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--reduced",
+         "--epochs", str(epochs), "--steps-per-epoch", "2", "--batch", "2",
+         "--seq", "16", "--cache-dir", str(tmpdir),
+         "--cache-compress", compress, *extra],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out
+
+
+def test_cache_dir_resumes_warm_and_invalidates_on_seed_change(tmp_path):
+    cache_dir = tmp_path / "act_cache"
+
+    # run 1: cold — epoch 0 pays the backbone forward, epoch 1 is cached,
+    # and a manifest lands in the cache dir
+    out1 = _run(cache_dir)
+    assert "(full)" in out1.stdout and "(cached)" in out1.stdout
+    assert "cache manifest:" in out1.stdout
+    assert (cache_dir / "manifest.json").exists()
+
+    # run 2: warm — the manifest validates, *every* epoch (including
+    # epoch 0) trains from the cache: zero backbone forwards
+    out2 = _run(cache_dir)
+    assert "warm manifest" in out2.stdout
+    assert "(full)" not in out2.stdout
+    assert out2.stdout.count("(cached)") == 2
+    assert "epoch 0" in out2.stdout
+
+    # run 3: changed seed — new backbone + corpus fingerprints must
+    # invalidate loudly and re-run the forward
+    out3 = _run(cache_dir, "--seed", "1")
+    assert "ACTIVATION CACHE INVALIDATED" in out3.stderr
+    assert "backbone" in out3.stderr and "corpus" in out3.stderr
+    assert "(full)" in out3.stdout
+
+    # run 4: the re-captured cache under the new seed is warm again
+    out4 = _run(cache_dir, "--seed", "1")
+    assert "(full)" not in out4.stdout
+
+
+def test_cache_policy_change_invalidates(tmp_path):
+    cache_dir = tmp_path / "act_cache"
+    _run(cache_dir)
+    out = _run(cache_dir, epochs=1, compress="bf16")
+    assert "ACTIVATION CACHE INVALIDATED" in out.stderr
+    assert "compression policy changed" in out.stderr

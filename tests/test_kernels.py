@@ -103,3 +103,18 @@ def test_flash_kernel_property(s_exp, hd, seed):
     out = flash_attention_tpu(q, k, v, bq=32, bk=32, interpret=True)
     want = ref.flash_attention_ref(q, k, v)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=3e-5)
+
+@pytest.mark.parametrize(
+    "T,d,da",
+    [(100, 130, 70), (100, 512, 96), (33, 257, 65), (1, 5, 3)],
+)
+def test_adapter_fuse_ragged_shapes(T, d, da):
+    """Non-divisible (T, d, da) — e.g. --seq 100 — must pad-and-slice, not
+    assert (ISSUE 3 regression: the kernel hard-asserted divisibility)."""
+    b = jax.random.normal(KEY, (T, d))
+    w = jax.random.normal(jax.random.fold_in(KEY, 7), (d, da))
+    a = jax.random.normal(jax.random.fold_in(KEY, 8), (T, da))
+    out = adapter_fuse(b, w, a, jnp.float32(0.7), bt=64, bj=64, bk=128, interpret=True)
+    assert out.shape == (T, da)
+    want = ref.adapter_fuse_ref(b, w, a, 0.7)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-4)

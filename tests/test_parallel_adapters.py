@@ -204,3 +204,78 @@ def test_adapter_config_scaling():
     assert acfg.d_model <= cfg.d_model // 8 + 64
     assert acfg.moe is None  # MoE becomes dense in the side network
     assert acfg.n_layers == cfg.n_layers
+
+
+@pytest.mark.parametrize(
+    "policy,loss_tol,grad_tol",
+    [
+        # f32 entries are bit-exact; bf16 carries ~2^-8 relative error on
+        # the taps, int8 ~1/254 of each block's absmax — the documented
+        # tolerances of the README's compression table. Adapter grads are
+        # compared on max|Δ| relative to the reference grad magnitude.
+        ("f32", 0.0, 0.0),
+        ("bf16", 5e-2, 5e-2),
+        ("int8", 1e-1, 1e-1),
+    ],
+)
+def test_cached_epoch_equivalence_per_policy(
+    tiny_cfg, tiny_backbone, tiny_adapter, tiny_batch, policy, loss_tol, grad_tol
+):
+    """ISSUE 3 acceptance: training from compressed cache entries matches
+    the uncached path — exactly for f32, within dtype tolerance for
+    bf16/int8 — through the same put_batch/get_batch path the trainer
+    uses (b_final folded into the entry)."""
+    import functools
+
+    cfg, bp, ap, batch = tiny_cfg, tiny_backbone, tiny_adapter, tiny_batch
+    opt = adamw_init(ap)
+
+    loss_ref, grads_ref = jax.value_and_grad(
+        lambda a: steps.pac_loss_fn(a, bp, cfg, batch, r=4)
+    )(ap)
+    _, _, _, (b0, taps, bf) = steps.pac_train_step(bp, ap, opt, batch, cfg=cfg, r=4)
+
+    cache = ActivationCache(budget_bytes=1 << 30, compress=policy)
+    ids = list(range(b0.shape[0]))
+    cache.put_batch(ids, b0, taps, bf)
+    cb0, ctaps, cbf = cache.get_batch(ids, with_final=True, dtype=None)
+    cached = {
+        "b0": jnp.asarray(cb0),
+        "taps": jnp.asarray(ctaps),
+        "b_final": jnp.asarray(cbf),
+        "labels": batch["labels"],
+    }
+
+    from repro.core.parallel_adapters import pac_logits
+    from repro.models.backbone import cross_entropy
+
+    B, S = b0.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def cached_loss(a):
+        cb = {k: jnp.asarray(v, jnp.float32) for k, v in cached.items() if k != "labels"}
+        logits = pac_logits(bp, a, cfg, cb["b0"], cb["taps"], cb["b_final"], positions, 4)
+        return cross_entropy(logits, cached["labels"])
+
+    loss_c, grads_c = jax.value_and_grad(cached_loss)(ap)
+
+    if policy == "f32":
+        assert float(loss_ref) == pytest.approx(float(loss_c), abs=1e-6)
+    else:
+        assert abs(float(loss_ref) - float(loss_c)) <= loss_tol, (
+            float(loss_ref), float(loss_c))
+    gmax_ref = max(float(jnp.max(jnp.abs(g))) for g in jax.tree.leaves(grads_ref))
+    for a, b in zip(jax.tree.leaves(grads_ref), jax.tree.leaves(grads_c)):
+        d = float(jnp.max(jnp.abs(a - b)))
+        if policy == "f32":
+            # the entry round-trip is bit-exact; the residual is f32
+            # evaluation-order noise between the two loss graphs
+            assert d <= 1e-6, d
+        else:
+            assert d <= grad_tol * max(1.0, gmax_ref), (d, gmax_ref)
+
+    # and the full jitted cached *train step* stays finite + loss matches
+    stepN = jax.jit(functools.partial(steps.pac_cached_train_step, cfg=cfg, r=4))
+    loss_s, ap2, _ = stepN(bp, ap, opt, cached)
+    assert abs(float(loss_s) - float(loss_c)) < 1e-6
+    assert all(np.isfinite(np.asarray(l)).all() for l in jax.tree.leaves(ap2))

@@ -93,3 +93,155 @@ def test_dequant_inside_jit_and_grad_flow_blocked():
 
     v = f(x, qt)
     assert jnp.isfinite(v)
+
+
+# ---------------------------------------------------------------------------
+# Round-trip property tests: INT4 nibble padding, zero blocks, nbytes
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    rows=st.integers(1, 6),
+    cols=st.sampled_from([1, 3, 5, 7, 99, 127, 129, 255]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_int4_odd_last_dim_roundtrip(rows, cols, seed):
+    """Odd ``orig_last`` exercises the nibble-pad path: the packed byte
+    array covers an even padded length, dequantize slices back exactly."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((rows, cols)), jnp.float32)
+    qt = quantize(x, bits=4, block=128)
+    xd = dequantize(qt)
+    assert xd.shape == x.shape
+    # packed bytes cover an even number of nibbles >= cols
+    assert qt.q.shape[-1] * 2 >= cols
+    assert qt.q.shape[-1] * 2 % 2 == 0
+    block = min(128, cols) + (min(128, cols) % 2)  # quantize's even bump
+    nb = -(-cols // block)
+    xpad = jnp.pad(x, ((0, 0), (0, nb * block - cols)))
+    absmax = jnp.max(jnp.abs(xpad.reshape(rows, nb, block)), axis=-1)
+    bound = jnp.repeat(absmax / 7, block, axis=-1)[:, :cols] * 0.5
+    assert jnp.all(jnp.abs(xd - x) <= bound * 1.01 + 1e-5 * (1 + jnp.abs(x)))
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_all_zero_blocks_roundtrip_exact(bits):
+    """An all-zero block hits the scale==0 branch: inv is forced to 0 (no
+    divide-by-zero, no NaN) and the block dequantizes to exact zeros,
+    also when only *some* blocks are zero."""
+    x = np.zeros((2, 256), np.float32)
+    x[:, 128:] = np.random.default_rng(0).standard_normal((2, 128))
+    qt = quantize(jnp.asarray(x), bits=bits, block=128)
+    scale = np.asarray(qt.scale)
+    assert np.all(scale[:, 0] == 0)  # zero block -> zero scale
+    xd = np.asarray(dequantize(qt))
+    assert np.all(np.isfinite(xd))
+    np.testing.assert_array_equal(xd[:, :128], 0)
+    assert np.max(np.abs(xd[:, 128:] - x[:, 128:])) <= np.max(np.abs(x)) / (
+        127 if bits == 8 else 7
+    ) * 0.51
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    cols=st.integers(1, 300),
+    bits=st.sampled_from([8, 4]),
+    block=st.sampled_from([16, 64, 128]),
+)
+def test_qtensor_nbytes_accounting(cols, bits, block):
+    """nbytes == int payload bytes + 4 per f32 scale, exactly — what the
+    activation cache budgets against."""
+    x = jnp.ones((4, cols))
+    qt = quantize(x, bits=bits, block=block)
+    eff_block = min(block, cols)
+    if bits == 4 and eff_block % 2:
+        eff_block += 1
+    nb = -(-cols // eff_block)
+    padded = nb * eff_block
+    expect_q = 4 * (padded // 2 if bits == 4 else padded)
+    expect_scale = 4 * nb * 4
+    assert qt.nbytes == expect_q + expect_scale
+    assert np.asarray(qt.q).nbytes == expect_q
+
+
+# ---------------------------------------------------------------------------
+# quantize_tree: the router skip list (ISSUE 3 regression)
+# ---------------------------------------------------------------------------
+
+
+def test_quantize_tree_skips_router_by_name():
+    """The docstring's promise — "routers are quantization-sensitive" —
+    must be enforced: a `"router"` leaf stays f32 no matter its size,
+    while sibling expert weights of the same size quantize."""
+    from repro.models.moe import init_moe
+    from repro.configs import get_arch
+
+    spec = get_arch("mixtral-8x7b").reduced().moe
+    p = init_moe(jax.random.PRNGKey(0), 128, spec)
+    assert p["router"].size >= 256  # large enough that size alone won't skip it
+    qt = quantize_tree(p, bits=8, min_size=256)
+    assert not isinstance(qt["router"], QTensor)
+    assert qt["router"].dtype == jnp.float32
+    assert isinstance(qt["wi"], QTensor) and isinstance(qt["wo"], QTensor)
+    # dequant path leaves the router untouched bit-for-bit
+    back = maybe_dequantize_tree(qt)
+    np.testing.assert_array_equal(np.asarray(back["router"]), np.asarray(p["router"]))
+
+
+def test_quantize_tree_skip_applies_at_any_depth():
+    tree = {
+        "blocks": [
+            {"router": jnp.ones((64, 64)), "w": jnp.ones((64, 64))},
+            {"router": jnp.ones((64, 64)), "w": jnp.ones((64, 64))},
+        ]
+    }
+    qt = quantize_tree(tree, min_size=1024)
+    for blk in qt["blocks"]:
+        assert not isinstance(blk["router"], QTensor)
+        assert isinstance(blk["w"], QTensor)
+
+
+def test_quantize_tree_on_full_moe_backbone():
+    """End-to-end: every router in an MoE backbone survives quantize_tree
+    as f32 (the trainer's --quant path on mixtral/grok-style archs)."""
+    from repro import compat
+    from repro.configs import get_arch
+    from repro.models import backbone as bb
+
+    cfg = get_arch("mixtral-8x7b").reduced()
+    bp = bb.init_backbone(jax.random.PRNGKey(0), cfg)
+    bq = quantize_tree(bp, bits=8, min_size=1024)
+    routers = []
+
+    def check(path, leaf):
+        names = [str(getattr(k, "key", getattr(k, "name", getattr(k, "idx", ""))))
+                 for k in path]
+        if "router" in names:
+            routers.append(leaf)
+            assert not isinstance(leaf, QTensor), names
+        return leaf
+
+    compat.tree_map_with_path(check, bq, is_leaf=lambda x: isinstance(x, QTensor))
+    assert routers, "MoE backbone should contain router leaves"
+
+
+def test_quantize_tree_skip_matches_router_like_names():
+    """The skip list is substring-based: router-like keys under any name
+    ("moe_router", "router_w") stay f32, and a bare-string skip_names is
+    one name, not a character set."""
+    tree = {
+        "moe_router": jnp.ones((64, 64)),
+        "router_w": jnp.ones((64, 64)),
+        "w": jnp.ones((64, 64)),
+    }
+    qt = quantize_tree(tree, min_size=1024)
+    assert not isinstance(qt["moe_router"], QTensor)
+    assert not isinstance(qt["router_w"], QTensor)
+    assert isinstance(qt["w"], QTensor)
+    qt2 = quantize_tree(tree, min_size=1024, skip_names="w")
+    assert not isinstance(qt2["w"], QTensor)
+    assert not isinstance(qt2["router_w"], QTensor)
+    assert isinstance(qt2["moe_router"], QTensor)  # no "w" in the key
+    qt3 = quantize_tree(tree, min_size=1024, skip_names=("zzz",))
+    assert all(isinstance(v, QTensor) for v in qt3.values())

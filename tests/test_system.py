@@ -46,7 +46,6 @@ def test_full_pac_workflow(tmp_path):
     corpus = SyntheticPersonalCorpus(cfg.vocab, S + 1, 16, seed=0)
     pipe = DataPipeline(corpus, global_batch=B, shuffle=True)
     cache = ActivationCache(budget_bytes=1 << 30)
-    final_cache = {}
 
     step1 = jax.jit(functools.partial(steps.pac_train_step, cfg=cfg, r=4))
     stepN = jax.jit(functools.partial(steps.pac_cached_train_step, cfg=cfg, r=4))
@@ -62,17 +61,15 @@ def test_full_pac_workflow(tmp_path):
         for batch in pipe.epoch(epoch):
             ids = batch.pop("seq_ids")
             order.extend(int(k) for k in ids)
-            hit = cache.get_batch(ids)
+            hit = cache.get_batch(ids, with_final=True)
             if hit is None:
-                # Step 5: epoch-1 — backbone forward + adapter update
+                # Step 5: epoch-1 — backbone forward + adapter update;
+                # b_final is folded into the budgeted cache entry
                 loss, ap, opt, (b0, taps, bf) = step1(bq, ap, opt, batch)
-                cache.put_batch(ids, b0, taps)
-                for i, k in enumerate(ids):
-                    final_cache[int(k)] = np.asarray(bf)[i]
+                cache.put_batch(ids, b0, taps, bf)
             else:
                 # Step 6: epoch≥2 — activation-cache hit, adapter-only
-                b0, taps = hit
-                bfh = np.stack([final_cache[int(k)] for k in ids])
+                b0, taps, bfh = hit
                 cached = {
                     "b0": jnp.asarray(b0),
                     "taps": jnp.asarray(taps),
