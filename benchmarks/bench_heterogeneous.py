@@ -4,7 +4,20 @@ PAC+ vs its heterogeneity-oblivious predecessor (PAC) vs cost models of
 Asteroid (HPP + full-parameter FT) and HetPipe (inter-group DP +
 intra-group PP + full FT, higher comm). 1-epoch and 3-epoch totals
 (epochs ≥2 use the activation cache in PAC+/PAC only).
+
+``--executed`` adds an *executed* row next to the modelled ones: the
+ragged Env.B plan (10 periods over 3 uneven stages) runs for real
+through the 1F1B SPMD pipeline on fake host devices (subprocess — the
+device count must be forced before JAX initialises), reporting measured
+ms/step beside the plan's modelled ms/minibatch. Different silicon, same
+Plan — the point is that the modelled numbers now have an execution
+path that can contradict them.
 """
+
+import os
+import subprocess
+import sys
+import textwrap
 
 import numpy as np
 
@@ -40,7 +53,44 @@ def _hetpipe_like(costs, devs, mbs, M):
     return pp.minibatch_latency * 1.35 + sync / STEPS_PER_EPOCH
 
 
-def main(arch="bart-large-pac") -> list:
+_EXECUTED_CHILD = textwrap.dedent(
+    """
+    from repro.compat import force_host_device_count
+    force_host_device_count(4)
+    # the ONE definition of the executed-plan workload lives in the example;
+    # this bench only harvests its timings
+    from examples.plan_edge_cluster import execute_winning_plan
+    r = execute_winning_plan(N_STEPS)
+    print(f"EXEC modelled_ms={r['modelled_ms']:.3f} "
+          f"executed_ms={r['executed_ms']:.1f} compile_ms={r['compile_ms']:.0f} "
+          f"stages={r['stages']} ragged={int(r['ragged'])} "
+          f"periods={'/'.join(map(str, r['periods']))}")
+    """
+)
+
+
+def executed_rows(n_steps: int = 3) -> list:
+    """Run the ragged Env.B plan for real (subprocess, 4 fake host devices;
+    the workload is ``examples.plan_edge_cluster.execute_winning_plan``)
+    and report executed-vs-modelled latency rows."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(root, "src"), root, env.get("PYTHONPATH", "")) if p
+    )
+    env["JAX_PLATFORMS"] = "cpu"
+    code = f"N_STEPS = {n_steps}\n" + _EXECUTED_CHILD
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env=env, timeout=1200, cwd=root,
+    )
+    if out.returncode != 0:
+        raise RuntimeError(f"executed-plan child failed:\n{out.stderr[-3000:]}")
+    line = next(l for l in out.stdout.splitlines() if l.startswith("EXEC "))
+    return [row("fig12_executed_plan", 0.0, line[5:].replace(" ", ";"))]
+
+
+def main(arch="bart-large-pac", executed: bool = False) -> list:
     cfg = get_arch(arch)
     out = []
     rows = {}
@@ -85,8 +135,17 @@ def main(arch="bart-large-pac") -> list:
         f"claim=2.9-9.7x (1ep), 6.9-14.7x (3ep), ≤35% het gain;"
         f"holds={s3_ast > s1_ast and s1_ast > 1.0}",
     ))
+    if executed:
+        out.extend(executed_rows())
     return out
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--executed", action="store_true",
+                    help="also run the ragged Env.B plan for real on fake "
+                         "host devices (subprocess)")
+    args = ap.parse_args()
+    main(executed=args.executed)  # row() prints as it goes

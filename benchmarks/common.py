@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.launch.hlo_cost import analyze_hlo
+from repro.launch.hlo_cost import analyze_compiled
 
 
 def timeit(fn: Callable, *args, iters: int = 3, warmup: int = 1) -> float:
@@ -35,7 +35,7 @@ def timeit(fn: Callable, *args, iters: int = 3, warmup: int = 1) -> float:
 def hlo_cost_of(fn: Callable, *args):
     """(flops, bytes) from the compiled module of fn(*args)."""
     compiled = jax.jit(fn).lower(*args).compile()
-    c = analyze_hlo(compiled.as_text())
+    c = analyze_compiled(compiled)
     return c.flops, c.bytes
 
 

@@ -12,8 +12,6 @@ import argparse
 import dataclasses
 import sys
 
-sys.path.insert(0, "src")
-
 from repro.configs.base import ArchConfig, LayerSpec, register
 
 # a ~100M decoder (12L, d=768, ff=2048, vocab=16384)
@@ -43,10 +41,10 @@ def main():
 
     cfg = PAC_DEMO_100M
     if args.small:
-        cfg = dataclasses.replace(
+        cfg = register(dataclasses.replace(
             cfg, name="pac-demo-10m", n_layers=4, d_model=256, n_heads=4,
             n_kv_heads=4, head_dim=64, d_ff=1024, vocab=4096,
-        )
+        ))
     print(f"model: {cfg.name}, {cfg.param_count()/1e6:.1f}M params")
 
     # steps 1..6 of the paper workflow live in the trainer CLI — reuse it

@@ -8,33 +8,36 @@ import sys
 
 import jax
 
-sys.path.insert(0, "src")
-
 from repro.configs import get_arch, list_archs
 from repro.core import steps
 from repro.core.parallel_adapters import init_adapter
 from repro.models import backbone as bb
 from repro.optim import adamw_init
 
-arch = sys.argv[1] if len(sys.argv) > 1 else "gemma2-2b"
-print(f"available architectures: {list_archs()}")
 
-cfg = get_arch(arch).reduced()  # CPU-scale variant of the same family
-backbone = bb.init_backbone(jax.random.PRNGKey(0), cfg)  # frozen
-adapter = init_adapter(jax.random.PRNGKey(1), cfg, r=8)  # trainable side net
-opt = adamw_init(adapter)
+def main(arch: str = "gemma2-2b") -> None:
+    print(f"available architectures: {list_archs()}")
 
-B, S = 4, 32
-batch = {
-    "tokens": jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab),
-    "labels": jax.random.randint(jax.random.PRNGKey(3), (B, S), 0, cfg.vocab),
-}
-if cfg.frontend:  # audio/vlm: the stub frontend supplies embeddings
-    batch["embeds"] = jax.random.normal(jax.random.PRNGKey(4), (B, S, cfg.d_model)) * 0.3
-    del batch["tokens"]
+    cfg = get_arch(arch).reduced()  # CPU-scale variant of the same family
+    backbone = bb.init_backbone(jax.random.PRNGKey(0), cfg)  # frozen
+    adapter = init_adapter(jax.random.PRNGKey(1), cfg, r=8)  # trainable side net
+    opt = adamw_init(adapter)
 
-step = jax.jit(functools.partial(steps.pac_train_step, cfg=cfg, r=8))
-for i in range(10):
-    loss, adapter, opt, _cache = step(backbone, adapter, opt, batch)
-    print(f"step {i}: loss={float(loss):.4f}")
-print("done — backbone untouched, adapter fine-tuned.")
+    B, S = 4, 32
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab),
+        "labels": jax.random.randint(jax.random.PRNGKey(3), (B, S), 0, cfg.vocab),
+    }
+    if cfg.frontend:  # audio/vlm: the stub frontend supplies embeddings
+        batch["embeds"] = jax.random.normal(jax.random.PRNGKey(4), (B, S, cfg.d_model)) * 0.3
+        del batch["tokens"]
+
+    step = jax.jit(functools.partial(steps.pac_train_step, cfg=cfg, r=8))
+    for i in range(10):
+        loss, adapter, opt, _cache = step(backbone, adapter, opt, batch)
+        print(f"step {i}: loss={float(loss):.4f}")
+    print("done — backbone untouched, adapter fine-tuned.")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:2])

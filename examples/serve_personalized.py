@@ -11,43 +11,47 @@ import time
 import jax
 import jax.numpy as jnp
 
-sys.path.insert(0, "src")
-
 from repro.configs import get_arch
 from repro.core import steps
 from repro.core.parallel_adapters import init_adapter, init_adapter_cache
 from repro.core.quantization import quantize_tree
 from repro.models import backbone as bb
 
-arch = sys.argv[1] if len(sys.argv) > 1 else "xlstm-125m"
-n_new = int(sys.argv[2]) if len(sys.argv) > 2 else 24
 
-cfg = get_arch(arch).reduced()
-backbone = quantize_tree(bb.init_backbone(jax.random.PRNGKey(0), cfg), bits=8, min_size=1024)
-adapter = init_adapter(jax.random.PRNGKey(1), cfg, r=8)
+def main(arch: str = "xlstm-125m", n_new: int = 24) -> None:
+    cfg = get_arch(arch).reduced()
+    backbone = quantize_tree(bb.init_backbone(jax.random.PRNGKey(0), cfg), bits=8, min_size=1024)
+    adapter = init_adapter(jax.random.PRNGKey(1), cfg, r=8)
 
-B, MAXLEN = 4, 64
-cache = bb.init_cache(cfg, B, MAXLEN)
-acache = init_adapter_cache(cfg, B, MAXLEN, r=8)
-step = jax.jit(functools.partial(steps.pac_decode_step, cfg=cfg, r=8))
+    B, MAXLEN = 4, 64
+    cache = bb.init_cache(cfg, B, MAXLEN)
+    acache = init_adapter_cache(cfg, B, MAXLEN, r=8)
+    step = jax.jit(functools.partial(steps.pac_decode_step, cfg=cfg, r=8))
 
-prompt = jax.random.randint(jax.random.PRNGKey(2), (B, 8), 0, cfg.vocab)
-tok = prompt[:, :1]
-out_tokens = []
-t0 = time.time()
-for t in range(prompt.shape[1] + n_new):
-    if cfg.frontend:
-        inp = {"embeds": jnp.zeros((B, 1, cfg.d_model))}
-    else:
-        inp = {"tokens": tok}
-    logits, cache, acache = step(backbone, adapter, inp, cache, acache, jnp.int32(t))
-    if t + 1 < prompt.shape[1]:
-        tok = prompt[:, t + 1 : t + 2]  # teacher-force the prompt
-    else:
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        out_tokens.append(tok)
-dt = time.time() - t0
-gen = jnp.concatenate(out_tokens, axis=1)
-print(f"arch={cfg.name} batch={B}: generated {gen.shape[1]} tokens/seq "
-      f"in {dt:.2f}s ({B * gen.shape[1] / dt:.1f} tok/s)")
-print("sample:", gen[0][:16].tolist())
+    prompt = jax.random.randint(jax.random.PRNGKey(2), (B, 8), 0, cfg.vocab)
+    tok = prompt[:, :1]
+    out_tokens = []
+    t0 = time.time()
+    for t in range(prompt.shape[1] + n_new):
+        if cfg.frontend:
+            inp = {"embeds": jnp.zeros((B, 1, cfg.d_model))}
+        else:
+            inp = {"tokens": tok}
+        logits, cache, acache = step(backbone, adapter, inp, cache, acache, jnp.int32(t))
+        if t + 1 < prompt.shape[1]:
+            tok = prompt[:, t + 1 : t + 2]  # teacher-force the prompt
+        else:
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            out_tokens.append(tok)
+    dt = time.time() - t0
+    gen = jnp.concatenate(out_tokens, axis=1)
+    print(f"arch={cfg.name} batch={B}: generated {gen.shape[1]} tokens/seq "
+          f"in {dt:.2f}s ({B * gen.shape[1] / dt:.1f} tok/s)")
+    print("sample:", gen[0][:16].tolist())
+
+
+if __name__ == "__main__":
+    main(
+        sys.argv[1] if len(sys.argv) > 1 else "xlstm-125m",
+        int(sys.argv[2]) if len(sys.argv) > 2 else 24,
+    )

@@ -13,68 +13,70 @@ import time
 import jax
 import jax.numpy as jnp
 
-sys.path.insert(0, "src")
-
 from repro.configs import get_arch
 from repro.core import steps
 from repro.core.quantization import quantize_tree, tree_storage_bytes
 from repro.models import backbone as bb
 
-arch = sys.argv[1] if len(sys.argv) > 1 else "internlm2-1.8b"
-n_new = int(sys.argv[2]) if len(sys.argv) > 2 else 16
 
-cfg = get_arch(arch).reduced()
-bp_f32 = bb.init_backbone(jax.random.PRNGKey(0), cfg)
-bp_q = quantize_tree(bp_f32, bits=8, min_size=1024)
-B, MAXLEN = 4, 48
-step = jax.jit(functools.partial(steps.decode_step, cfg=cfg))
-
-
-def generate(params, cache):
-    tok = jax.random.randint(jax.random.PRNGKey(2), (B, 1), 0, cfg.vocab)
-    toks, last = [], None
-    for t in range(n_new):
-        inp = {"embeds": jnp.zeros((B, 1, cfg.d_model))} if cfg.frontend else {"tokens": tok}
-        logits, cache = step(params, inp, cache, jnp.int32(t))
-        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-        toks.append(tok)
-        last = logits
-    return jnp.concatenate(toks, 1), cache, last
-
-
-def cache_bytes(cache):
+def _cache_bytes(cache):
     return sum(t.size * t.dtype.itemsize for t in jax.tree.leaves(cache))
 
 
-t0 = time.time()
-ref, c_f, lg_f = generate(bp_f32, bb.init_cache(cfg, B, MAXLEN))
-t_f = time.time() - t0
+def main(arch: str = "internlm2-1.8b", n_new: int = 16) -> None:
+    cfg = get_arch(arch).reduced()
+    bp_f32 = bb.init_backbone(jax.random.PRNGKey(0), cfg)
+    bp_q = quantize_tree(bp_f32, bits=8, min_size=1024)
+    B, MAXLEN = 4, 48
+    step = jax.jit(functools.partial(steps.decode_step, cfg=cfg))
 
-t0 = time.time()
-out, c_q, lg_q = generate(bp_q, bb.init_cache(cfg, B, MAXLEN, kv_quant=8))
-t_q = time.time() - t0
+    def generate(params, cache):
+        tok = jax.random.randint(jax.random.PRNGKey(2), (B, 1), 0, cfg.vocab)
+        toks, last = [], None
+        for t in range(n_new):
+            inp = {"embeds": jnp.zeros((B, 1, cfg.d_model))} if cfg.frontend else {"tokens": tok}
+            logits, cache = step(params, inp, cache, jnp.int32(t))
+            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+            toks.append(tok)
+            last = logits
+        return jnp.concatenate(toks, 1), cache, last
 
-agree = float(jnp.mean((ref == out).astype(jnp.float32)))
-print(f"arch={cfg.name}  {n_new} tokens × batch {B}")
-print(f"  weights: f32 {tree_storage_bytes(bp_f32)/2**20:.1f} MB -> int8 "
-      f"{tree_storage_bytes(bp_q)/2**20:.1f} MB")
-print(f"  KV cache: f32 {cache_bytes(c_f)/2**20:.1f} MB -> int8+scales "
-      f"{cache_bytes(c_q)/2**20:.1f} MB")
-print(f"  wall: f32 {t_f:.2f}s, quantized {t_q:.2f}s (CPU; TPU target is "
-      f"bandwidth-bound where the 4x byte cut pays)")
-print(f"  greedy-token agreement: {agree:.1%} (random weights -> near-"
-      f"uniform logits; step flips compound autoregressively)")
+    t0 = time.time()
+    ref, c_f, lg_f = generate(bp_f32, bb.init_cache(cfg, B, MAXLEN))
+    t_f = time.time() - t0
 
-# faithfulness check under teacher forcing (same tokens through both)
-forced = jax.random.randint(jax.random.PRNGKey(3), (B, n_new), 0, cfg.vocab)
-cf, cq = bb.init_cache(cfg, B, MAXLEN), bb.init_cache(cfg, B, MAXLEN, kv_quant=8)
-worst = 0.0
-for t in range(n_new):
-    inp = ({"embeds": jnp.zeros((B, 1, cfg.d_model))} if cfg.frontend
-           else {"tokens": forced[:, t : t + 1]})
-    lf, cf = step(bp_f32, inp, cf, jnp.int32(t))
-    lq, cq = step(bp_q, inp, cq, jnp.int32(t))
-    worst = max(worst, float(jnp.max(jnp.abs(lq - lf))) / (float(jnp.max(jnp.abs(lf))) + 1e-6))
-print(f"  max relative logit deviation (teacher-forced, int8 W + int8 KV): {worst:.2%}")
-assert worst < 0.10, "quantized serving diverged from the f32 reference"
-print("ok")
+    t0 = time.time()
+    out, c_q, lg_q = generate(bp_q, bb.init_cache(cfg, B, MAXLEN, kv_quant=8))
+    t_q = time.time() - t0
+
+    agree = float(jnp.mean((ref == out).astype(jnp.float32)))
+    print(f"arch={cfg.name}  {n_new} tokens × batch {B}")
+    print(f"  weights: f32 {tree_storage_bytes(bp_f32)/2**20:.1f} MB -> int8 "
+          f"{tree_storage_bytes(bp_q)/2**20:.1f} MB")
+    print(f"  KV cache: f32 {_cache_bytes(c_f)/2**20:.1f} MB -> int8+scales "
+          f"{_cache_bytes(c_q)/2**20:.1f} MB")
+    print(f"  wall: f32 {t_f:.2f}s, quantized {t_q:.2f}s (CPU; TPU target is "
+          f"bandwidth-bound where the 4x byte cut pays)")
+    print(f"  greedy-token agreement: {agree:.1%} (random weights -> near-"
+          f"uniform logits; step flips compound autoregressively)")
+
+    # faithfulness check under teacher forcing (same tokens through both)
+    forced = jax.random.randint(jax.random.PRNGKey(3), (B, n_new), 0, cfg.vocab)
+    cf, cq = bb.init_cache(cfg, B, MAXLEN), bb.init_cache(cfg, B, MAXLEN, kv_quant=8)
+    worst = 0.0
+    for t in range(n_new):
+        inp = ({"embeds": jnp.zeros((B, 1, cfg.d_model))} if cfg.frontend
+               else {"tokens": forced[:, t : t + 1]})
+        lf, cf = step(bp_f32, inp, cf, jnp.int32(t))
+        lq, cq = step(bp_q, inp, cq, jnp.int32(t))
+        worst = max(worst, float(jnp.max(jnp.abs(lq - lf))) / (float(jnp.max(jnp.abs(lf))) + 1e-6))
+    print(f"  max relative logit deviation (teacher-forced, int8 W + int8 KV): {worst:.2%}")
+    assert worst < 0.10, "quantized serving diverged from the f32 reference"
+    print("ok")
+
+
+if __name__ == "__main__":
+    main(
+        sys.argv[1] if len(sys.argv) > 1 else "internlm2-1.8b",
+        int(sys.argv[2]) if len(sys.argv) > 2 else 16,
+    )

@@ -91,9 +91,17 @@ def simulate_plan(plan, comm_bytes_per_stage: Optional[Sequence[float]] = None) 
     """Replay 1F1B through the plan's stage times; returns timing breakdown."""
     S, M = plan.n_stages, plan.micro_batches
     sched = build_1f1b_schedule(S, M)
-    # per-stage fwd/bwd time: stage_time = tf + tb; approximate tf:tb = 1:2
-    tf = [st.stage_time / 3.0 for st in plan.stages]
-    tb = [2.0 * st.stage_time / 3.0 for st in plan.stages]
+    # per-stage fwd/bwd split as recorded from LayerCost by the planner's
+    # _phase_latencies; hand-built stages without recorded times fall back
+    # to the historical tf:tb = 1:2 approximation
+    tf, tb = [], []
+    for st in plan.stages:
+        if getattr(st, "fwd_time", 0.0) or getattr(st, "bwd_time", 0.0):
+            tf.append(st.fwd_time)
+            tb.append(st.bwd_time)
+        else:
+            tf.append(st.stage_time / 3.0)
+            tb.append(2.0 * st.stage_time / 3.0)
     if comm_bytes_per_stage is None:
         comm = [0.0] * S
     else:
@@ -156,6 +164,33 @@ def stack_stages(blocks, n_stages: int):
     return jax.tree.map(f, blocks)
 
 
+def stack_stages_ragged(blocks, boundaries: Sequence[int]):
+    """Uneven re-chunk: stage ``s`` owns periods ``[boundaries[s],
+    boundaries[s+1])``; every stage's slab is zero-padded to the max
+    periods-per-stage so the leaves stay rectangular —
+    (n_stages, max_pp, ...). Padded slots must be masked to identity by
+    the stage function (see the partition's ``masks()``)."""
+    counts = [b - a for a, b in zip(boundaries, boundaries[1:])]
+    assert counts and min(counts) >= 1, f"bad boundaries {boundaries}"
+    max_pp = max(counts)
+
+    def f(x):
+        n_p = x.shape[0]
+        assert n_p == boundaries[-1], (
+            f"{n_p} periods but boundaries end at {boundaries[-1]}"
+        )
+        slabs = []
+        for a, b in zip(boundaries, boundaries[1:]):
+            s = x[a:b]
+            if b - a < max_pp:
+                pad = jnp.zeros((max_pp - (b - a),) + x.shape[1:], x.dtype)
+                s = jnp.concatenate([s, pad], axis=0)
+            slabs.append(s)
+        return jnp.stack(slabs)
+
+    return jax.tree.map(f, blocks)
+
+
 def pipeline_apply(
     stage_fn: Callable,
     stage_params,
@@ -164,6 +199,7 @@ def pipeline_apply(
     axis: str = "stage",
     batch_axis: Optional[str] = None,
     collect_taps: bool = False,
+    periods_per_stage: Optional[Sequence[int]] = None,
 ):
     """GPipe-style rotation: run ``stage_fn`` over pipelined micro-batches.
 
@@ -182,6 +218,13 @@ def pipeline_apply(
     ``collect_taps`` a pair ``(outs, taps)`` where ``taps`` is
     (n_micro, n_periods_total, mb, ...) assembled across stages in layer
     order (stage s owns periods [s·pp, (s+1)·pp)).
+
+    ``periods_per_stage`` declares a *ragged* partition (a planner
+    :class:`~repro.core.planner.StagePartition` executed for real): every
+    stage's tap buffer is padded to max(periods_per_stage) — build the
+    params with :func:`stack_stages_ragged` and mask padded periods to
+    identity inside ``stage_fn`` — and the taps are assembled in true
+    layer order from the uneven boundaries, dropping the padding slots.
 
     Differentiable: ``ppermute``'s transpose is the reverse permutation, so
     ``jax.grad`` through this function implements the backward pipeline.
@@ -255,10 +298,20 @@ def pipeline_apply(
     if not collect_taps:
         return fn(stage_params, x_micro)
     outs, taps = fn(stage_params, x_micro)
-    # (n_stages, n_micro, pp, mb, ...) → (n_micro, n_stages·pp, mb, ...);
+    # (n_stages, n_micro, pp, mb, ...) → (n_micro, n_periods, mb, ...);
     # stage-major period order == layer order (stack_stages is contiguous)
     taps = jnp.moveaxis(taps, 0, 1)
-    taps = taps.reshape((taps.shape[0], taps.shape[1] * taps.shape[2]) + taps.shape[3:])
+    if periods_per_stage is not None and len(set(periods_per_stage)) > 1:
+        # ragged partition: keep each stage's first pp_s (active) periods,
+        # concatenated in stage order == true layer order
+        assert len(periods_per_stage) == n_stages, (periods_per_stage, n_stages)
+        taps = jnp.concatenate(
+            [taps[:, s, :pp] for s, pp in enumerate(periods_per_stage)], axis=1
+        )
+    else:
+        taps = taps.reshape(
+            (taps.shape[0], taps.shape[1] * taps.shape[2]) + taps.shape[3:]
+        )
     return outs, taps
 
 

@@ -23,6 +23,7 @@ scalability/heterogeneity studies (Figs. 12, 16, 17).
 
 from __future__ import annotations
 
+import json
 import math
 from dataclasses import dataclass, field
 from functools import lru_cache
@@ -150,6 +151,42 @@ def model_layer_costs(cfg, technique: str = "pac", dtype_bytes: int = 4, seq_len
     return costs
 
 
+def aggregate_periods(costs: Sequence[LayerCost], layers_per_period: int) -> List[LayerCost]:
+    """Collapse per-layer costs to per-*period* costs (the runtime's unit).
+
+    The backbone stacks parameters over periods and scans whole periods, so
+    an executable plan must cut on period boundaries. FLOPs and memory sum
+    over the period's layers; inter-stage activation bytes are the *last*
+    layer's output (the only tensor that crosses a period boundary).
+    """
+    if layers_per_period < 1 or len(costs) % layers_per_period:
+        raise ValueError(
+            f"{len(costs)} layer costs not divisible into periods of {layers_per_period}"
+        )
+    out: List[LayerCost] = []
+    for i in range(0, len(costs), layers_per_period):
+        chunk = costs[i : i + layers_per_period]
+        out.append(
+            LayerCost(
+                fwd_flops=sum(c.fwd_flops for c in chunk),
+                bwd_flops=sum(c.bwd_flops for c in chunk),
+                param_bytes=sum(c.param_bytes for c in chunk),
+                trainable_bytes=sum(c.trainable_bytes for c in chunk),
+                act_bytes=chunk[-1].act_bytes,
+                resident_act_bytes=sum(c.resident_act_bytes for c in chunk),
+            )
+        )
+    return out
+
+
+def period_costs(cfg, technique: str = "pac", dtype_bytes: int = 4, seq_len: int = 128, quant_bits: Optional[int] = None) -> List[LayerCost]:
+    """Per-period costs for ``cfg`` — what a runtime-executable plan consumes
+    (one planner "layer" == one backbone period)."""
+    return aggregate_periods(
+        model_layer_costs(cfg, technique, dtype_bytes, seq_len, quant_bits), cfg.period
+    )
+
+
 # ---------------------------------------------------------------------------
 # Plan data model
 # ---------------------------------------------------------------------------
@@ -162,6 +199,65 @@ class Stage:
     devices: Tuple[DeviceProfile, ...]
     samples_per_device: Tuple[int, ...]  # micro-batch split
     stage_time: float  # max over devices of fwd+bwd for its share
+    # recorded from LayerCost by _phase_latencies (fwd_time + bwd_time ==
+    # stage_time); 0.0 on hand-built stages — simulate_plan falls back to
+    # its historical 1:2 approximation then
+    fwd_time: float = 0.0
+    bwd_time: float = 0.0
+
+
+@dataclass(frozen=True)
+class StagePartition:
+    """Runtime-facing view of a :class:`Plan`: the executable contract.
+
+    ``boundaries`` are cumulative *period* indices — stage ``s`` owns
+    periods ``[boundaries[s], boundaries[s+1])``. ``masks`` pads every
+    stage to ``max_periods`` (the padded slots run as identity periods in
+    the SPMD pipeline); ``samples_per_device`` is the planner's Eq. (4)
+    dispatch per stage, carried so the runtime/report layer can consume
+    and validate it against the executed micro-batch size.
+    """
+
+    boundaries: Tuple[int, ...]  # len n_stages + 1, boundaries[0] == 0
+    samples_per_device: Tuple[Tuple[int, ...], ...]
+    n_micro: int
+
+    def __post_init__(self):
+        b = self.boundaries
+        if len(b) < 2 or b[0] != 0 or any(y <= x for x, y in zip(b, b[1:])):
+            raise ValueError(f"bad stage boundaries {b}")
+        if len(self.samples_per_device) != self.n_stages:
+            raise ValueError(
+                f"{len(self.samples_per_device)} sample splits for {self.n_stages} stages"
+            )
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.boundaries) - 1
+
+    @property
+    def n_periods(self) -> int:
+        return self.boundaries[-1]
+
+    @property
+    def periods_per_stage(self) -> Tuple[int, ...]:
+        return tuple(y - x for x, y in zip(self.boundaries, self.boundaries[1:]))
+
+    @property
+    def max_periods(self) -> int:
+        return max(self.periods_per_stage)
+
+    @property
+    def is_uniform(self) -> bool:
+        pps = self.periods_per_stage
+        return all(p == pps[0] for p in pps)
+
+    def masks(self) -> Tuple[Tuple[bool, ...], ...]:
+        """(n_stages, max_periods) active-period masks (False == padding)."""
+        m = self.max_periods
+        return tuple(
+            tuple(i < pp for i in range(m)) for pp in self.periods_per_stage
+        )
 
 
 @dataclass
@@ -186,6 +282,99 @@ class Plan:
                 f"split={st.samples_per_device} time={st.stage_time * 1e3:.1f}ms"
             )
         return "\n".join(out)
+
+    # -- executable artifact -------------------------------------------------
+    def stage_partition(self, layers_per_period: int = 1) -> StagePartition:
+        """Derive the runtime contract. The plan's layer indices convert to
+        period indices; every stage boundary must fall on a period boundary
+        (guaranteed when the planner was fed :func:`period_costs`)."""
+        bounds = [0]
+        for i, st in enumerate(self.stages):
+            if st.layer_start != (self.stages[i - 1].layer_end + 1 if i else 0):
+                raise ValueError("plan stages are not contiguous")
+            end = st.layer_end + 1
+            if end % layers_per_period:
+                raise ValueError(
+                    f"stage {i} ends at layer {st.layer_end}, not a period "
+                    f"boundary (period = {layers_per_period} layers); plan at "
+                    f"period granularity (planner.period_costs) to execute"
+                )
+            bounds.append(end // layers_per_period)
+        return StagePartition(
+            boundaries=tuple(bounds),
+            samples_per_device=tuple(tuple(st.samples_per_device) for st in self.stages),
+            n_micro=self.micro_batches,
+        )
+
+    # -- JSON round-trip (save once, replay on the pool) ---------------------
+    def to_json(self, indent: Optional[int] = 2) -> str:
+        return json.dumps(
+            {
+                "version": 1,
+                "n_stages": self.n_stages,
+                "micro_batches": self.micro_batches,
+                "latency_begin": self.latency_begin,
+                "latency_exec": self.latency_exec,
+                "latency_end": self.latency_end,
+                "stages": [
+                    {
+                        "layer_start": st.layer_start,
+                        "layer_end": st.layer_end,
+                        "devices": [
+                            {
+                                "name": d.name,
+                                "flops": d.flops,
+                                "memory_bytes": d.memory_bytes,
+                                "bandwidth": d.bandwidth,
+                            }
+                            for d in st.devices
+                        ],
+                        "samples_per_device": list(st.samples_per_device),
+                        "stage_time": st.stage_time,
+                        "fwd_time": st.fwd_time,
+                        "bwd_time": st.bwd_time,
+                    }
+                    for st in self.stages
+                ],
+            },
+            indent=indent,
+        )
+
+    @classmethod
+    def from_json(cls, text: str) -> "Plan":
+        d = json.loads(text)
+        if d.get("version") != 1:
+            raise ValueError(f"unsupported plan version {d.get('version')!r}")
+        stages = [
+            Stage(
+                layer_start=s["layer_start"],
+                layer_end=s["layer_end"],
+                devices=tuple(DeviceProfile(**dev) for dev in s["devices"]),
+                samples_per_device=tuple(s["samples_per_device"]),
+                stage_time=s["stage_time"],
+                fwd_time=s.get("fwd_time", 0.0),
+                bwd_time=s.get("bwd_time", 0.0),
+            )
+            for s in d["stages"]
+        ]
+        return cls(
+            stages=stages,
+            n_stages=d["n_stages"],
+            micro_batches=d["micro_batches"],
+            latency_begin=d["latency_begin"],
+            latency_exec=d["latency_exec"],
+            latency_end=d["latency_end"],
+        )
+
+    def save(self, path: str) -> str:
+        with open(path, "w") as f:
+            f.write(self.to_json())
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "Plan":
+        with open(path) as f:
+            return cls.from_json(f.read())
 
 
 # ---------------------------------------------------------------------------
@@ -308,7 +497,7 @@ class HybridParallelismPlanner:
             # ring AllReduce within the group
             k = len(devs)
             ar.append(2.0 * train_bytes * (k - 1) / (k * bw) if k > 1 else 0.0)
-            stages.append(Stage(x, y, devs, split, tf + tb))
+            stages.append(Stage(x, y, devs, split, tf + tb, fwd_time=tf, bwd_time=tb))
         # Eq. (5)
         L_b = sum(e[i][0] + c_f[i] for i in range(s - 1))
         L_e = self.M * (e[-1][0] + e[-1][1])

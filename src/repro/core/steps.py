@@ -119,21 +119,50 @@ def pac_cached_train_step(
 # ---------------------------------------------------------------------------
 
 
-def _backbone_stage_fn(cfg):
+def _backbone_stage_fn(cfg, masked: bool = False):
     """One pipeline stage of the frozen backbone: scan this stage's periods,
-    emitting every period's hidden state (the PAC+ taps)."""
+    emitting every period's hidden state (the PAC+ taps).
+
+    ``masked=True`` is the ragged-partition variant: the stage params are
+    ``{"blocks": padded_slab, "mask": (max_pp,)}`` (see
+    ``stack_stages_ragged``) and periods whose mask is False run as
+    identity — they are the zero-padding that equalizes slab shapes across
+    uneven stages, and both their carry and their tap slot are discarded.
+    """
     from repro.models.backbone import apply_block
 
-    def stage_fn(block_slice, h):
+    def run_period(bs, hh, positions):
+        for i, spec in enumerate(cfg.pattern):
+            hh = apply_block(bs[i], hh, cfg, spec, positions)
+        return hh
+
+    def _positions(h):
         lead = (3,) if cfg.rope == "mrope" else ()
-        positions = jnp.broadcast_to(
+        return jnp.broadcast_to(
             jnp.arange(h.shape[1], dtype=jnp.int32), lead + h.shape[:2]
         )
 
+    if masked:
+
+        def stage_fn(local, h):
+            positions = _positions(h)
+
+            def period_fn(carry, xs):
+                bs, m = xs
+                hh = jnp.where(m, run_period(bs, carry, positions), carry)
+                return hh, hh
+
+            return jax.lax.scan(
+                period_fn, h, (tuple(local["blocks"]), local["mask"])
+            )
+
+        return stage_fn
+
+    def stage_fn(block_slice, h):
+        positions = _positions(h)
+
         def period_fn(carry, bs):
-            hh = carry
-            for i, spec in enumerate(cfg.pattern):
-                hh = apply_block(bs[i], hh, cfg, spec, positions)
+            hh = run_period(bs, carry, positions)
             return hh, hh
 
         return jax.lax.scan(period_fn, h, tuple(block_slice))
@@ -144,23 +173,45 @@ def _backbone_stage_fn(cfg):
 def pipeline_pac_loss_and_grads(
     backbone_params, adapter_params, batch, *, cfg, mesh, n_micro,
     r: int = 8, dp_axis: str = "dp", stage_axis: str = "stage",
+    partition=None,
 ):
     """Distributed epoch-1 forward+grads: staged backbone forward over the
     ``stage`` mesh axis (1F1B micro-batching via :func:`pipeline_apply`),
     adapter loss/grads data-parallel over ``dp`` with an explicit psum
     (the paper's per-minibatch AllReduce of the *trainable* params only).
 
+    ``partition`` (a :class:`~repro.core.planner.StagePartition`) makes the
+    planner's Plan the execution contract: its period boundaries choose
+    what each stage runs. A *uniform* partition reduces to exactly the
+    even-split path (bit-for-bit — same stage function, same stacking); a
+    *ragged* one pads each stage's parameter slab to the max
+    periods-per-stage, runs the padding as masked identity periods, and
+    re-assembles the taps in true layer order from the uneven boundaries.
+
     Returns (loss, adapter_grads, (b0, taps, b_final)) — the activation
     triple is what the cache captures; all are global (dp-sharded) arrays.
     """
-    from repro.core.pipeline import pipeline_apply, stack_stages
+    from repro.core.pipeline import pipeline_apply, stack_stages, stack_stages_ragged
     from repro.models.backbone import cross_entropy_parts
 
     from repro.data import DataPipeline
 
     n_stages = mesh.shape[stage_axis]
     dp = mesh.shape[dp_axis] if dp_axis in mesh.axis_names else 1
-    if cfg.n_periods % n_stages:
+    if partition is not None:
+        if partition.n_stages != n_stages:
+            raise ValueError(
+                f"plan has {partition.n_stages} stages but the mesh's "
+                f"{stage_axis!r} axis has {n_stages}"
+            )
+        if partition.n_periods != cfg.n_periods:
+            raise ValueError(
+                f"plan partitions {partition.n_periods} periods but "
+                f"{cfg.name} has {cfg.n_periods}"
+            )
+        if partition.is_uniform:
+            partition = None  # identical to the even split — take that path
+    if partition is None and cfg.n_periods % n_stages:
         raise ValueError(
             f"{cfg.n_periods} periods not divisible by {n_stages} pipeline stages"
         )
@@ -177,11 +228,23 @@ def pipeline_pac_loss_and_grads(
     # staged backbone forward: (B,S,d) → micro-batched → 1F1B pipeline
     # (dp_microbatches owns the layout contract + divisibility checks)
     x_micro = DataPipeline.dp_microbatches({"x": x}, n_micro, dp)["x"]
-    stage_blocks = stack_stages(backbone_params["blocks"], n_stages)
+    if partition is None:
+        stage_params = stack_stages(backbone_params["blocks"], n_stages)
+        stage_fn = _backbone_stage_fn(cfg)
+        pps = None
+    else:  # ragged plan: padded slabs + per-stage active-period masks
+        stage_params = {
+            "blocks": stack_stages_ragged(
+                backbone_params["blocks"], partition.boundaries
+            ),
+            "mask": jnp.asarray(partition.masks(), dtype=bool),
+        }
+        stage_fn = _backbone_stage_fn(cfg, masked=True)
+        pps = partition.periods_per_stage
     b_final_micro, taps_micro = pipeline_apply(
-        _backbone_stage_fn(cfg), stage_blocks, x_micro, mesh,
+        stage_fn, stage_params, x_micro, mesh,
         axis=stage_axis, batch_axis=dp_axis if dp > 1 else None,
-        collect_taps=True,
+        collect_taps=True, periods_per_stage=pps,
     )
     b_final = b_final_micro.reshape((B,) + b_final_micro.shape[2:])
     # (n_micro, n_p, mb, S, d) → (n_p, B, S, d) — micro-major sample order
@@ -227,18 +290,22 @@ def pipeline_pac_loss_and_grads(
 def pipeline_pac_train_step(
     backbone_params, adapter_params, opt_state, batch, *, cfg, mesh, n_micro,
     r: int = 8, lr=1e-3, clip=1.0, dp_axis: str = "dp", stage_axis: str = "stage",
+    partition=None,
 ):
     """Epoch-1 PAC+ step on a 2-D ``(dp, stage)`` mesh — the distributed
     twin of :func:`pac_train_step` (same signature plus mesh/n_micro).
 
-    Backbone forward runs staged over ``stage`` with 1F1B micro-batching;
-    adapter grads are AllReduced across ``dp``; the update itself is
-    replicated (identical on every device after the AllReduce). Returns
+    Backbone forward runs staged over ``stage`` with 1F1B micro-batching
+    (optionally along a planner ``partition`` — see
+    :func:`pipeline_pac_loss_and_grads`); adapter grads are AllReduced
+    across ``dp``; the update itself is replicated (identical on every
+    device after the AllReduce). Returns
     (loss, adapter_params', opt_state', (b0, taps, b_final)).
     """
     loss, grads, acts = pipeline_pac_loss_and_grads(
         backbone_params, adapter_params, batch, cfg=cfg, mesh=mesh,
         n_micro=n_micro, r=r, dp_axis=dp_axis, stage_axis=stage_axis,
+        partition=partition,
     )
     grads, _ = clip_by_global_norm(grads, clip)
     adapter_params, opt_state = adamw_update(adapter_params, grads, opt_state, lr=lr)

@@ -1,0 +1,155 @@
+"""Unified cost-model surface for planning and performance analysis.
+
+Before this module the repo had three disjoint cost models:
+
+* the planner's **analytic** ``model_layer_costs`` (FLOPs from matmul
+  shapes, paper Fig. 3 / Table I accounting);
+* the **trip-count-aware HLO** pricer ``launch.hlo_cost.analyze_hlo``
+  (what the dry-run matrix and the benchmarks measure);
+* the **roofline**'s device-time conversion (peak FLOP/s, HBM, ICI).
+
+They answer the same question — "what does this computation cost?" — at
+different fidelities, and they never talked to each other: the planner
+partitioned stages from analytic numbers that nothing ever checked
+against a compiled module. This module puts them behind one
+:class:`CostModel` protocol at the granularity the runtime executes
+(**periods**, see :func:`repro.core.planner.period_costs`) and adds the
+calibrated backend the ``--calibrate`` trainer flag uses: lower one
+period of the real step with :func:`repro.launch.specs.build_case`,
+price it with :func:`~repro.launch.hlo_cost.analyze_compiled`, and scale
+the analytic per-period FLOPs so their totals match the measured module.
+Memory accounting (parameter/activation residency) stays analytic — the
+HLO module doesn't expose liveness — so OOM feasibility is unchanged.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import List, Optional, Protocol, runtime_checkable
+
+from repro.core.planner import LayerCost, model_layer_costs, period_costs
+
+
+@runtime_checkable
+class CostModel(Protocol):
+    """Anything that prices a backbone for the planner.
+
+    Returns one :class:`LayerCost` per *period* — the unit the SPMD
+    pipeline can actually cut on (``HybridParallelismPlanner`` fed these
+    produces plans whose ``stage_partition()`` is executable as-is).
+    """
+
+    def period_costs(self, cfg, technique: str = "pac", seq_len: int = 128) -> List[LayerCost]:
+        ...
+
+
+@dataclass(frozen=True)
+class AnalyticCostModel:
+    """The paper's closed-form accounting (no compilation needed)."""
+
+    dtype_bytes: int = 4
+    quant_bits: Optional[int] = None
+
+    def layer_costs(self, cfg, technique: str = "pac", seq_len: int = 128) -> List[LayerCost]:
+        return model_layer_costs(
+            cfg, technique, dtype_bytes=self.dtype_bytes, seq_len=seq_len,
+            quant_bits=self.quant_bits,
+        )
+
+    def period_costs(self, cfg, technique: str = "pac", seq_len: int = 128) -> List[LayerCost]:
+        return period_costs(
+            cfg, technique, dtype_bytes=self.dtype_bytes, seq_len=seq_len,
+            quant_bits=self.quant_bits,
+        )
+
+
+def price_lowered(lowered_or_compiled):
+    """Lower/compile as needed and return the trip-count-aware ``Cost``."""
+    from repro.launch.hlo_cost import analyze_compiled
+
+    obj = lowered_or_compiled
+    if hasattr(obj, "compile"):  # a jax Lowered
+        obj = obj.compile()
+    return analyze_compiled(obj)
+
+
+@dataclass(frozen=True)
+class HloCalibratedCostModel:
+    """Analytic memory model + HLO-measured compute.
+
+    Calibration lowers small cases at the *actual* trainer shape
+    (micro-batch × seq): the ``pac`` step and the ``pac_cached`` step on a
+    one-period model, whose difference isolates the measured
+    backbone-forward FLOPs per period; and the cached step again on a
+    two-period model, so the *slope* between the two cached measurements
+    prices one period of the trainable side while the intercept is the
+    shared head/CE/optimizer overhead (spread evenly over periods —
+    without the slope/intercept split a one-period measurement divided by
+    n_periods would under-count the adapter by ~n_periods×). Scales apply
+    uniformly over periods — per-period *shape* heterogeneity (MoE vs
+    dense layers) still comes from the analytic ratios, so a hybrid
+    pattern keeps its relative weights while the absolute FLOPs match the
+    compiled HLO.
+    """
+
+    micro_batch: int = 4
+    dtype_bytes: int = 4
+    quant_bits: Optional[int] = None
+
+    def _measure(self, cfg, technique: str, seq_len: int, periods: int = 1):
+        from repro.configs.base import InputShape
+        from repro.launch import mesh as mesh_mod
+        from repro.launch.specs import build_case
+
+        cfgN = dataclasses.replace(cfg, n_layers=periods * cfg.period)
+        shape = InputShape("calibrate", seq_len, self.micro_batch, "train")
+        mesh = mesh_mod.make_mesh((1, 1), ("data", "model"))
+        case = build_case(
+            cfgN, shape, mesh, technique=technique, quant_bits=self.quant_bits
+        )
+        return price_lowered(case.lower())
+
+    def period_costs(self, cfg, technique: str = "pac", seq_len: int = 128) -> List[LayerCost]:
+        base = period_costs(
+            cfg, technique, dtype_bytes=self.dtype_bytes, seq_len=seq_len,
+            quant_bits=self.quant_bits,
+        )
+        if technique not in ("pac", "pac_cached"):
+            return base  # calibration targets the PAC+ trainer path
+        mb = self.micro_batch
+        pac = self._measure(cfg, "pac", seq_len)
+        cached1 = self._measure(cfg, "pac_cached", seq_len)
+        # per-sample measured FLOPs: pac-minus-cached on the same 1-period
+        # model ≈ one backbone-period forward
+        meas_fwd = max(pac.flops - cached1.flops, 0.0) / mb
+        if cfg.n_periods > 1:
+            cached2 = self._measure(cfg, "pac_cached", seq_len, periods=2)
+            # slope = one period of adapter fwd+bwd; intercept = the
+            # period-count-independent head/CE/optimizer overhead
+            per_period = max(cached2.flops - cached1.flops, 0.0) / mb
+            overhead = max(cached1.flops / mb - per_period, 0.0)
+        else:
+            per_period, overhead = cached1.flops / mb, 0.0
+        # every period tiles the same pattern, so the analytic per-period
+        # costs are identical — one measured period calibrates them all
+        ana_fwd = base[0].fwd_flops
+        ana_bwd = base[0].bwd_flops
+        s_fwd = meas_fwd / ana_fwd if ana_fwd else 1.0
+        s_bwd = per_period / ana_bwd if ana_bwd else 1.0
+        extra_bwd = overhead / len(base)  # shared overhead, spread evenly
+        return [
+            dataclasses.replace(
+                c,
+                fwd_flops=c.fwd_flops * s_fwd,
+                bwd_flops=c.bwd_flops * s_bwd + extra_bwd,
+            )
+            for c in base
+        ]
+
+
+def resolve_cost_model(calibrate: bool, micro_batch: int = 4, quant_bits: Optional[int] = None) -> CostModel:
+    """The trainer's ``--calibrate`` switch in one place."""
+    if calibrate:
+        return HloCalibratedCostModel(micro_batch=micro_batch, quant_bits=quant_bits)
+    return AnalyticCostModel(quant_bits=quant_bits)

@@ -314,6 +314,14 @@ def _comp_cost(comp: Computation, comps, memo) -> Cost:
     return total
 
 
+def analyze_compiled(compiled) -> Cost:
+    """Price a compiled (post-SPMD, per-device) jax computation.
+
+    The one entry point the roofline, the benchmarks, and the calibrated
+    planner cost model share (see ``repro.launch.costs``)."""
+    return analyze_hlo(compiled.as_text())
+
+
 def analyze_hlo(text: str) -> Cost:
     comps = parse_module(text)
     entry = None

@@ -45,6 +45,22 @@ def make_edge_mesh(dp: int, stages: int, devices=None):
     return compat.make_mesh((dp, stages), ("dp", "stage"), devices=devices[:total])
 
 
+def make_plan_mesh(partition, devices=None, dp: int = None):
+    """2-D ``(dp, stage)`` mesh shaped by an executable
+    :class:`~repro.core.planner.StagePartition`: the plan's stage count
+    becomes the ``stage`` axis; ``dp`` defaults to the widest replica
+    count the device pool supports (pool // stages — the uniform-mesh
+    rendering of the plan's per-stage device groups)."""
+    import jax
+
+    stages = partition.n_stages
+    if devices is None:
+        devices = jax.devices()
+    if dp is None:
+        dp = max(1, len(devices) // stages)
+    return make_edge_mesh(dp, stages, devices)
+
+
 def data_axes(mesh) -> tuple:
     """Mesh axes that shard the batch (pod composes with data; the edge
     trainer's 2-D mesh calls its batch axis dp)."""

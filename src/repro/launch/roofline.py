@@ -100,11 +100,12 @@ def analyze(
     n_adapter_params: float = 0.0,
 ) -> RooflineTerms:
     # trip-count-aware cost model (XLA's cost_analysis counts scan bodies
-    # once — see launch/hlo_cost.py); numbers are per-device (post-SPMD HLO)
-    from repro.launch.hlo_cost import analyze_hlo
+    # once — see launch/hlo_cost.py); numbers are per-device (post-SPMD
+    # HLO). Shared entry point with the planner's calibrated cost model
+    # (launch/costs.py) and the benchmarks.
+    from repro.launch.costs import price_lowered
 
-    hlo = compiled.as_text()
-    cost = analyze_hlo(hlo)
+    cost = price_lowered(compiled)
     flops = cost.flops
     byts = cost.bytes
     coll = {k: cost.collectives.get(k, 0.0) for k in _COLLECTIVES}

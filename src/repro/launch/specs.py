@@ -113,7 +113,9 @@ def build_case(
     kv_quant: Optional[int] = None,
 ) -> Case:
     cfg = get_arch(arch) if isinstance(arch, str) else arch
-    shape = INPUT_SHAPES[shape_name]
+    # registered shape by name, or an ad-hoc InputShape (e.g. the planner's
+    # HLO calibration lowers one period at the trainer's actual batch/seq)
+    shape = shape_name if isinstance(shape_name, InputShape) else INPUT_SHAPES[shape_name]
     cfg, note = resolve_cfg_for_shape(cfg, shape)
     if quant_bits:
         note = (note + f" int{quant_bits}").strip()

@@ -20,6 +20,27 @@ same path CI exercises on every PR.
     PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
         --reduced --dp 2 --stages 2 --epochs 3 --batch 4 --seq 32
 
+With ``--plan`` the planner's Plan *is* the runtime contract (paper
+§V-A, Alg. 1 — the point of the system): ``--plan auto`` runs Alg. 1 at
+period granularity over a ``--pool``-sized device pool, and the winning
+plan selects the stage count, the (possibly uneven) per-stage layer
+boundaries, and the micro-batch count; the mesh is built from the plan
+and the hybrid step executes those exact boundaries (ragged stages run
+padded slabs with masked identity periods). ``--plan <file.json>``
+replays a plan saved earlier with ``--save-plan`` (`Plan.to_json`
+round-trip). ``--calibrate`` prices one real lowered period with the
+trip-count-aware HLO cost model and feeds the measured ``LayerCost``s to
+the planner instead of the analytic ones.
+
+    # plan-driven: Alg. 1 chooses stages/boundaries/micro, trainer executes it
+    PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
+        --reduced --plan auto --pool 4 --epochs 3 --batch 4 --seq 32
+
+    # save once, replay on the pool
+    PYTHONPATH=src python -m repro.launch.train --reduced --plan auto \
+        --save-plan plan.json && \
+    PYTHONPATH=src python -m repro.launch.train --reduced --plan plan.json
+
 With ``--cache-dir`` the activation cache persists across runs: the
 first run captures (compressed per ``--cache-compress``) entries and
 writes a manifest fingerprinting the backbone + corpus; a second run
@@ -68,11 +89,46 @@ def main() -> None:
     ap.add_argument("--dp", type=int, default=1, help="data-parallel mesh axis")
     ap.add_argument("--stages", type=int, default=1, help="pipeline stages (mesh axis)")
     ap.add_argument("--micro", type=int, default=None,
-                    help="micro-batches per minibatch (default: --stages)")
+                    help="micro-batches per minibatch (default: --stages; a "
+                         "replayed plan's micro count with --plan <file>; "
+                         "swept and selected by the planner with --plan auto)")
+    ap.add_argument("--plan", default=None,
+                    help="'auto' (run Alg. 1 and execute its winning plan: "
+                         "stage count, layer boundaries, micro count) or a "
+                         "plan JSON saved with --save-plan")
+    ap.add_argument("--pool", type=int, default=None,
+                    help="device-pool size for --plan auto (default: "
+                         "max(dp*stages, 4); the mesh uses dp*stages <= pool)")
+    ap.add_argument("--save-plan", default=None,
+                    help="write the executed plan as JSON for later replay")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="price one lowered period with the HLO cost model "
+                         "and plan from measured LayerCosts")
     args = ap.parse_args()
 
+    plan_mode = args.plan is not None
     total = args.dp * args.stages
-    if total > 1:
+    pool = args.pool or max(total, 4)
+    saved_plan = None
+    if plan_mode and args.plan != "auto":
+        # a saved plan knows its stage count, and Plan.load is pure JSON
+        # (no JAX state) — load it now so the replay pool is sized before
+        # the device-count knob locks
+        from repro.core.planner import Plan as _Plan
+
+        saved_plan = _Plan.load(args.plan)
+        if args.pool is not None and args.pool < saved_plan.n_stages:
+            raise SystemExit(
+                f"--pool {args.pool} is smaller than the saved plan's "
+                f"{saved_plan.n_stages} stages; pass --pool >= "
+                f"{saved_plan.n_stages} or replan with --plan auto")
+        pool = max(pool, saved_plan.n_stages)
+    if plan_mode:
+        # the plan decides dp×stages later, but the fake-device count must
+        # precede the first backend initialisation — force the whole pool
+        # (the mesh uses its first dp·stages devices)
+        compat.force_host_device_count(pool)
+    elif total > 1:
         # must precede the first JAX backend initialisation: on CPU this
         # fakes dp·stages host devices so the SPMD mesh is real
         compat.force_host_device_count(total)
@@ -90,15 +146,12 @@ def main() -> None:
     )
     from repro.core.init_methods import pruning_init
     from repro.core.parallel_adapters import init_adapter
-    from repro.core.planner import (
-        HybridParallelismPlanner,
-        JETSON_NANO_H,
-        model_layer_costs,
-    )
+    from repro.core.planner import HybridParallelismPlanner, JETSON_NANO_H
     from repro.core.quantization import quantize_tree, tree_storage_bytes
     from repro.data import DataPipeline, SyntheticPersonalCorpus
     from repro.launch import sharding as shard
-    from repro.launch.mesh import make_edge_mesh
+    from repro.launch.costs import resolve_cost_model
+    from repro.launch.mesh import make_edge_mesh, make_plan_mesh
     from repro.models import backbone as bb
     from repro.optim import adamw_init
 
@@ -108,17 +161,72 @@ def main() -> None:
     print(f"arch={cfg.name} params≈{cfg.param_count()/1e6:.1f}M "
           f"active≈{cfg.active_param_count()/1e6:.1f}M")
 
-    distributed = total > 1
-    # default micro count: the mesh's stage count when distributed; the
-    # pre-existing 4-micro-batch planning report otherwise
-    n_micro = args.micro if args.micro is not None else (args.stages if distributed else 4)
-    if distributed:
-        if cfg.n_periods % args.stages:
+    def _build_plan(planner_mb, n_micro, max_stages):
+        # one construction site for both the executed plan and the report:
+        # period-granular costs (analytic or HLO-calibrated) through Alg. 1
+        cost_model = resolve_cost_model(
+            args.calibrate, micro_batch=max(1, args.batch // n_micro),
+            quant_bits=args.quant)
+        return HybridParallelismPlanner(
+            cost_model.period_costs(cfg, "pac", seq_len=args.seq),
+            [JETSON_NANO_H] * pool, planner_mb, n_micro,
+        ).plan(max_stages=max_stages)
+
+    partition = None
+    exec_dp, exec_stages = args.dp, args.stages
+    if plan_mode:
+        # ---- plan-driven execution: the Plan is the runtime contract ----
+        n_micro = args.micro or (saved_plan.micro_batches if saved_plan else None)
+        if n_micro is not None and args.batch % n_micro:
             raise SystemExit(
-                f"--stages {args.stages} must divide n_periods={cfg.n_periods}")
+                f"--batch {args.batch} must be divisible by the plan's "
+                f"{n_micro} micro-batches (override with --micro)")
+        if args.plan == "auto":
+            smax = min(pool, cfg.n_periods)
+            if n_micro is None:
+                # the plan selects the micro count too: σ-optimal latency
+                # over the batch's divisors
+                cands = [m for m in range(1, args.batch + 1) if args.batch % m == 0]
+                n_micro, plan = min(
+                    ((m, _build_plan(args.batch // m, m, smax)) for m in cands),
+                    key=lambda t: t[1].minibatch_latency)
+            else:
+                plan = _build_plan(args.batch // n_micro, n_micro, smax)
+        else:
+            if args.calibrate:
+                print("note: --calibrate has no effect when replaying a "
+                      "saved plan; re-run with --plan auto to replan")
+            plan = saved_plan
+        mb = args.batch // n_micro
+        partition = plan.stage_partition()
+        if partition.n_periods != cfg.n_periods:
+            raise SystemExit(
+                f"plan partitions {partition.n_periods} periods but "
+                f"{cfg.name} has {cfg.n_periods} — replan for this arch")
+        exec_stages = partition.n_stages
+        # widest replica count the pool and the batch layout support
+        exec_dp = max(1, pool // exec_stages)
+        while exec_dp > 1 and (args.batch // n_micro) % exec_dp:
+            exec_dp -= 1
+        print("plan:", plan.describe())
+        for s, split in enumerate(partition.samples_per_device):
+            if sum(split) != mb:
+                print(f"note: stage {s} was planned for {sum(split)} samples "
+                      f"per micro-batch, executing {mb}")
+        total = exec_dp * exec_stages
+    distributed = total > 1
+    # default micro count: the plan's when plan-driven, the mesh's stage
+    # count when distributed; the pre-existing 4-micro planning report otherwise
+    if not plan_mode:
+        n_micro = args.micro if args.micro is not None else (
+            args.stages if distributed else 4)
+    if distributed:
+        if partition is None and cfg.n_periods % exec_stages:
+            raise SystemExit(
+                f"--stages {exec_stages} must divide n_periods={cfg.n_periods}")
         # fail fast on an impossible batch layout, before any compute
         DataPipeline.dp_microbatches(
-            {"tokens": np.zeros((args.batch, args.seq), np.int32)}, n_micro, args.dp)
+            {"tokens": np.zeros((args.batch, args.seq), np.int32)}, n_micro, exec_dp)
 
     bp = bb.init_backbone(jax.random.PRNGKey(args.seed), cfg)
     if args.quant:
@@ -136,24 +244,34 @@ def main() -> None:
           f"({n_train/cfg.param_count():.2%} of backbone)")
     opt = adamw_init(adapter)
 
-    # offline planning (paper Step 3-4): the plan is computed for the
-    # executed micro-batch count; the stage count is CLI-pinned to the
-    # mesh shape and the planner's σ-optimum is reported against it
-    pool = max(total, 4)
-    plan = HybridParallelismPlanner(
-        model_layer_costs(cfg, "pac", seq_len=args.seq), [JETSON_NANO_H] * pool,
-        args.batch, n_micro,
-    ).plan(max_stages=args.stages if distributed else None)
-    print("edge-pool plan:", plan.describe().splitlines()[0])
-    if distributed and plan.n_stages != args.stages:
-        print(f"note: planner's σ-optimal stage count is {plan.n_stages}; "
-              f"executing --stages {args.stages} (uniform period split)")
+    if not plan_mode:
+        # offline planning report (paper Step 3-4): the plan is computed
+        # for the executed micro-batch count at period granularity; the
+        # stage count is CLI-pinned to the mesh shape and the planner's
+        # σ-optimum is reported against it. (--plan makes this plan the
+        # execution contract instead of a report.)
+        plan = _build_plan(args.batch, n_micro,
+                           args.stages if distributed else None)
+        print("edge-pool plan:", plan.describe().splitlines()[0])
+        if distributed and plan.n_stages != args.stages:
+            print(f"note: planner's σ-optimal stage count is {plan.n_stages}; "
+                  f"executing --stages {args.stages} (pass --plan auto to "
+                  f"execute the σ-optimum)")
+    if args.save_plan:
+        print(f"plan saved: {plan.save(args.save_plan)}")
 
     mesh = None
     if distributed:
-        mesh = make_edge_mesh(args.dp, args.stages)
-        print(f"mesh: hybrid dp={args.dp}×pp={args.stages} on "
-              f"{total} devices, {n_micro} micro-batches")
+        if plan_mode:
+            mesh = make_plan_mesh(partition, dp=exec_dp)
+            ragged = "" if partition.is_uniform else (
+                f", ragged periods {partition.periods_per_stage}")
+            print(f"mesh: plan-driven dp={exec_dp}×pp={exec_stages} on "
+                  f"{total} devices, {n_micro} micro-batches{ragged}")
+        else:
+            mesh = make_edge_mesh(exec_dp, exec_stages)
+            print(f"mesh: hybrid dp={exec_dp}×pp={exec_stages} on "
+                  f"{total} devices, {n_micro} micro-batches")
 
     n_seq = args.steps_per_epoch * args.batch
     corpus = SyntheticPersonalCorpus(cfg.vocab, args.seq + 1, n_seq, seed=args.seed)
@@ -191,7 +309,7 @@ def main() -> None:
         # epoch-1: staged backbone forward over `stage` + dp AllReduce
         step1 = jax.jit(functools.partial(
             steps.pipeline_pac_train_step, cfg=cfg, mesh=mesh, n_micro=n_micro,
-            r=args.r, lr=args.lr))
+            r=args.r, lr=args.lr, partition=partition))
         stepN = None  # built on first cached batch (needs its tree structure)
 
     for epoch in range(args.epochs):
@@ -240,7 +358,8 @@ def main() -> None:
         if used_cache:
             mode = "cached pure-dp" if distributed else "cached"
         elif distributed:
-            mode = f"hybrid dp{args.dp}xpp{args.stages}"
+            kind = "plan-driven" if plan_mode else "hybrid"
+            mode = f"{kind} dp{exec_dp}xpp{exec_stages}"
         else:
             mode = "full"
         print(f"epoch {epoch}: loss={np.mean(losses):.4f} time={dt:.1f}s ({mode}) "

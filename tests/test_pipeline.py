@@ -22,11 +22,37 @@ from repro.core.planner import (
 from repro.configs import get_arch
 
 
-@settings(max_examples=20, deadline=None)
-@given(S=st.integers(1, 6), M=st.integers(1, 12))
+@settings(max_examples=30, deadline=None)
+@given(S=st.integers(1, 8), M=st.integers(1, 16))
 def test_1f1b_schedule_legal(S, M):
+    """Property: every generated schedule validates (covers M<S and M=1)."""
     sched = build_1f1b_schedule(S, M)
     validate_schedule(sched, M)
+
+
+def test_1f1b_fewer_micros_than_stages():
+    """n_micro < n_stages: the warmup ``min(n_stages - s - 1, n_micro)``
+    path — early stages cap warmup at M, not the pipeline depth."""
+    S, M = 5, 2
+    sched = build_1f1b_schedule(S, M)
+    validate_schedule(sched, M)
+    for s, ops in enumerate(sched):
+        leading_f = 0
+        for op in ops:
+            if op.kind != "F":
+                break
+            leading_f += 1
+        # warmup (capped at M) plus the first steady-state F
+        assert leading_f == min(min(S - s - 1, M) + 1, M), (s, ops)
+        assert len(ops) == 2 * M  # every micro exactly one F and one B
+
+
+def test_1f1b_single_micro():
+    """n_micro == 1 degenerates to a straight F-then-B pass per stage."""
+    sched = build_1f1b_schedule(4, 1)
+    validate_schedule(sched, 1)
+    for ops in sched:
+        assert [(o.kind, o.micro) for o in ops] == [("F", 0), ("B", 0)]
 
 
 def test_1f1b_memory_bound_tight():
@@ -37,6 +63,49 @@ def test_1f1b_memory_bound_tight():
         inflight += 1 if op.kind == "F" else -1
         peak = max(peak, inflight)
     assert peak == 4
+
+
+def test_simulate_plan_consumes_recorded_fwd_bwd_times():
+    """Stage carries its measured tf/tb from LayerCost; the simulator uses
+    them instead of the historical hard-coded 1:2 split. A plan whose true
+    split is NOT 1:2 therefore times differently from the fallback."""
+    from repro.core.planner import DeviceProfile, Plan, Stage
+
+    dev = (DeviceProfile("d", 1e9, 1 << 30),)
+
+    def plan_with(splits):
+        stages = [
+            Stage(i, i, dev, (1,), tf + tb, fwd_time=tf, bwd_time=tb)
+            for i, (tf, tb) in enumerate(splits)
+        ]
+        return Plan(stages, len(stages), 2, 0.0, 0.0, 0.0)
+
+    def fallback_plan(times):
+        stages = [Stage(i, i, dev, (1,), t) for i, t in enumerate(times)]
+        return Plan(stages, len(stages), 2, 0.0, 0.0, 0.0)
+
+    # fwd-light stage 0 feeding a balanced stage 1: the 1:2 fallback
+    # mis-times both phases
+    skewed = plan_with([(0.1, 3.9), (1.0, 1.0)])
+    fb = fallback_plan([4.0, 2.0])
+    t_skew = simulate_plan(skewed)["minibatch_time"]
+    t_fb = simulate_plan(fb)["minibatch_time"]
+    assert abs(t_skew - t_fb) > 1e-6, (t_skew, t_fb)
+    # recorded times that ARE the 1:2 split reproduce the fallback exactly
+    thirds = plan_with([(4.0 / 3, 8.0 / 3), (2.0 / 3, 4.0 / 3)])
+    assert simulate_plan(thirds)["minibatch_time"] == pytest.approx(t_fb)
+
+
+def test_planner_stages_record_fwd_bwd_split():
+    """_phase_latencies stores per-stage tf/tb consistent with stage_time
+    and with the technique's fwd:bwd FLOP ratio (2:1 bwd:fwd for full FT)."""
+    costs = model_layer_costs(get_arch("t5-base-pac"), "full", seq_len=64)
+    plan = HybridParallelismPlanner(costs, [JETSON_NANO_H] * 4, 2, 4).plan()
+    for st in plan.stages:
+        assert st.fwd_time > 0 and st.bwd_time > 0
+        assert st.fwd_time + st.bwd_time == pytest.approx(st.stage_time)
+        # full fine-tuning: bwd ≈ 2× fwd per LayerCost construction
+        assert st.bwd_time == pytest.approx(2.0 * st.fwd_time, rel=1e-6)
 
 
 def test_simulator_bubble_shrinks_with_microbatches():
