@@ -9,9 +9,17 @@ hybrid DP×PP epoch-1 step and the pure-DP cached step are timed on an
 emulated (dp, stage) host-device mesh against the single-device step.
 Run as ``python -m benchmarks.bench_step_time --dp 2 --stages 2`` (own
 process: the device count locks at backend init).
+
+``--kernels`` benchmarks the cached-epoch fast path: the ref (dense jnp)
+vs Pallas (fused dequant×adapter + blockwise CE) cached step, per cache
+compression policy, and writes ``BENCH_cached_step.json`` so the perf
+trajectory has datapoints. Off-TPU the Pallas numbers are *interpreter
+mode* — a correctness/traffic datapoint, not a speed claim; rerun on TPU
+hardware for the real comparison.
 """
 
 import functools
+import json
 
 import jax
 import jax.numpy as jnp
@@ -96,6 +104,87 @@ def main(arch="t5-base-pac") -> list:
     return out
 
 
+def main_kernels(arch="t5-base-pac", B=8, S=64, out_json="BENCH_cached_step.json") -> list:
+    """Cached-epoch step: ref vs Pallas kernels, per cache policy.
+
+    Times the jitted ``pac_cached_train_step`` with ``kernel_impl="ref"``
+    (host-decompressed f32 entries — the pre-kernel path) against
+    ``kernel_impl="pallas"`` fed *storage-form* entries
+    (``get_batch(compressed=True)``: int8 payload+scales / bf16), and
+    records both plus the per-batch device-transfer bytes in
+    ``out_json``. On CPU the Pallas columns run the interpreter —
+    correctness-priced, not speed-priced (the JSON records the backend).
+    """
+    import jax
+
+    from repro.core.activation_cache import ActivationCache
+    from repro.kernels.cached_step import _auto_interpret
+
+    cfg = get_arch(arch).reduced()
+    bp = bb.init_backbone(jax.random.PRNGKey(0), cfg)
+    ap = init_adapter(jax.random.PRNGKey(3), cfg, r=8)
+    opt = adamw_init(ap)
+    batch = make_batch(cfg, B, S)
+    _, _, _, (b0, taps, bf) = steps.pac_train_step(bp, ap, opt, batch, cfg=cfg, r=8)
+    ids = list(range(B))
+    out, results = [], {}
+
+    step_ref = jax.jit(functools.partial(
+        steps.pac_cached_train_step, cfg=cfg, r=8, kernel_impl="ref"))
+    step_pal = jax.jit(functools.partial(
+        steps.pac_cached_train_step, cfg=cfg, r=8, kernel_impl="pallas"))
+
+    def entry_bytes(tree):
+        return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+    for policy in ("f32", "bf16", "int8"):
+        cache = ActivationCache(budget_bytes=1 << 30, compress=policy)
+        cache.put_batch(ids, b0, taps, bf)
+        # dtype=None is the pre-kernel trainer path: bf16 ships compressed
+        # and upcasts in-step, int8 dequantizes on the host to f32
+        plain = cache.get_batch(ids, with_final=True, dtype=None)
+        comp = cache.get_batch(ids, with_final=True, compressed=True)
+
+        def as_cached(hit):
+            cb0, ct, cbf = (jax.tree.map(jnp.asarray, h) for h in hit)
+            return {"b0": cb0, "taps": ct, "b_final": cbf,
+                    "labels": batch["labels"]}
+
+        cached_ref, cached_pal = as_cached(plain), as_cached(comp)
+        t_ref = timeit(step_ref, bp, ap, opt, cached_ref)
+        t_pal = timeit(step_pal, bp, ap, opt, cached_pal)
+        l_ref = float(step_ref(bp, ap, opt, cached_ref)[0])
+        l_pal = float(step_pal(bp, ap, opt, cached_pal)[0])
+        acts = {k: cached_pal[k] for k in ("b0", "taps", "b_final")}
+        results[policy] = {
+            "ref_ms": round(t_ref * 1e3, 3),
+            "pallas_ms": round(t_pal * 1e3, 3),
+            "ratio_pallas_over_ref": round(t_pal / t_ref, 3),
+            "cache_mb": round(cache.nbytes / 2**20, 3),
+            "h2d_bytes_per_batch": entry_bytes(acts),
+            "loss_ref": l_ref,
+            "loss_pallas": l_pal,
+            "loss_abs_diff": abs(l_ref - l_pal),
+        }
+        out.append(row(
+            f"cached_step_kernels_{policy}", t_pal * 1e6 / B,
+            f"ref_ms={t_ref*1e3:.2f};pallas_ms={t_pal*1e3:.2f};"
+            f"h2d_kb={entry_bytes(acts)/1024:.0f};"
+            f"loss_diff={abs(l_ref-l_pal):.2e}",
+        ))
+
+    payload = {
+        "arch": cfg.name, "batch": B, "seq": S,
+        "backend": jax.default_backend(),
+        "pallas_interpret_mode": _auto_interpret(None),
+        "policies": results,
+    }
+    with open(out_json, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    print(f"wrote {out_json}")
+    return out
+
+
 def main_distributed(arch="internlm2-1.8b", dp=2, stages=2, n_micro=None, B=8, S=64) -> list:
     """Hybrid DP×PP step time vs single device (requires dp·stages devices;
     call ``compat.force_host_device_count`` before any JAX compute)."""
@@ -150,8 +239,15 @@ if __name__ == "__main__":
     p.add_argument("--dp", type=int, default=1)
     p.add_argument("--stages", type=int, default=1)
     p.add_argument("--micro", type=int, default=None)
+    p.add_argument("--kernels", action="store_true",
+                   help="benchmark the ref-vs-pallas cached step per cache "
+                        "policy and write BENCH_cached_step.json")
+    p.add_argument("--out", default="BENCH_cached_step.json",
+                   help="JSON output path for --kernels")
     a = p.parse_args()
-    if a.dp * a.stages > 1:
+    if a.kernels:
+        main_kernels(a.arch or "t5-base-pac", out_json=a.out)
+    elif a.dp * a.stages > 1:
         from repro.compat import force_host_device_count
 
         force_host_device_count(a.dp * a.stages)

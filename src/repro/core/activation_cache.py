@@ -21,6 +21,13 @@ out in §V-B:
   decompressing/loading the *next* batches while the current train step
   runs, with the host→device transfer started early (double-buffered via
   a bounded queue).
+* **Compressed handoff** — ``get``/``get_batch``/``CachePrefetcher``
+  accept ``compressed=True`` and hand entries to the training step in
+  their *storage* form (int8 payload + scales as ``{"q", "scale"}``
+  dicts, bf16 arrays) instead of eagerly decompressing:
+  ``repro.kernels.cached_step`` then dequantises tile-wise in VMEM, so
+  the host→device transfer and HBM reads stay at storage width
+  (``--kernels pallas``).
 * **Cross-run persistence** — ``save_manifest``/``open_persistent``
   record and validate a manifest (corpus + backbone fingerprints,
   compression policy) next to the spill files, so a re-run against the
@@ -141,17 +148,33 @@ def _decompress(ct: _CTensor, dtype=np.float32) -> np.ndarray:
     """dtype=None returns the storage dtype where it is a real float type
     (bf16 entries ship compressed to the device; the train step upcasts).
 
-    int8 entries always dequantize on the host to f32 — their H2D
-    transfer is full-width. Shipping q+scale and dequantizing inside the
-    jitted step (as the quantized *weights* do via kernels/quant_matmul)
-    would keep the transfer at integer width; that needs QTensor-aware
-    cached-step shardings and is left to a future PR — the prefetcher
-    hides the host-side dequant cost in the meantime."""
+    int8 entries dequantize on the host to f32 here — their H2D transfer
+    is full-width. To keep the transfer at integer width instead, read
+    with ``compressed=True`` (:meth:`ActivationCache.get_batch`): the
+    raw ``{"q", "scale"}`` payload then reaches the jitted step and
+    `repro.kernels.cached_step` dequantizes it in VMEM."""
     if ct.policy in ("f32", "bf16"):
         return ct.data if dtype is None else np.asarray(ct.data, dtype)
     qt = QTensor(jnp.asarray(ct.data), jnp.asarray(ct.scale), 8, ct.block, ct.orig_last)
     out = np.asarray(dequantize(qt))
     return out if dtype is None else np.asarray(out, dtype)
+
+
+def _raw_part(ct: _CTensor):
+    """Storage-form view for the jitted step: f32/bf16 entries are their
+    payload array; int8 entries are the ``{"q", "scale"}`` dict that
+    ``kernels.cached_step`` consumes (dequantised in VMEM, so both the
+    host→device transfer and HBM reads stay at integer width)."""
+    if ct.policy == "int8":
+        return {"q": ct.data, "scale": ct.scale}
+    return ct.data
+
+
+def _stack_parts(parts, axis: int):
+    """Stack per-sequence storage-form parts (arrays or q/scale dicts)."""
+    if isinstance(parts[0], dict):
+        return {k: np.stack([p[k] for p in parts], axis=axis) for k in parts[0]}
+    return np.stack(parts, axis=axis)
 
 
 @dataclass
@@ -367,15 +390,21 @@ class ActivationCache:
             self.misses += 1
             return None
 
-    def get(self, key: int, with_final: bool = False, dtype=np.float32):
+    def get(self, key: int, with_final: bool = False, dtype=np.float32,
+            compressed: bool = False):
         """Decompressed (b0, taps) — or (b0, taps, b_final) with
         ``with_final``; None on miss (including an entry stored without
         b_final when b_final is requested). ``dtype=None`` keeps bf16
-        payloads compressed for the device transfer."""
+        payloads compressed for the device transfer. ``compressed=True``
+        skips host-side decompression entirely and returns each part in
+        its storage form (int8 entries as ``{"q", "scale"}`` dicts) for
+        a step that dequantizes on-device (``--kernels pallas``)."""
         entry = self._get_entry(int(key), need_final=with_final)
         if entry is None:
             return None
         parts = [entry.b0, entry.taps] + ([entry.b_final] if with_final else [])
+        if compressed:
+            return tuple(_raw_part(ct) for ct in parts)
         return tuple(_decompress(ct, dtype) for ct in parts)
 
     def put_batch(self, keys, b0: jax.Array, taps: jax.Array, b_final=None) -> None:
@@ -398,16 +427,26 @@ class ActivationCache:
             with self._lock:
                 self._put_entry(int(k), entry)
 
-    def get_batch(self, keys, with_final: bool = False, dtype=np.float32):
-        """Reassemble a training batch from cached sequences."""
-        items = [self.get(int(k), with_final=with_final, dtype=dtype) for k in keys]
+    def get_batch(self, keys, with_final: bool = False, dtype=np.float32,
+                  compressed: bool = False):
+        """Reassemble a training batch from cached sequences.
+
+        ``compressed=True`` hands back storage-form parts (see
+        :meth:`get`): the int8 policy yields ``{"q": (B,S,·) int8,
+        "scale": (B,S,·) f32}`` dicts instead of dequantized arrays —
+        the payload ``repro.kernels.cached_step`` dequantizes in VMEM."""
+        items = [
+            self.get(int(k), with_final=with_final, dtype=dtype,
+                     compressed=compressed)
+            for k in keys
+        ]
         if any(it is None for it in items):
             return None
-        b0 = np.stack([it[0] for it in items], axis=0)  # (B,S,d)
-        taps = np.stack([it[1] for it in items], axis=1)  # (n_p,B,S,d)
+        b0 = _stack_parts([it[0] for it in items], axis=0)  # (B,S,d)
+        taps = _stack_parts([it[1] for it in items], axis=1)  # (n_p,B,S,d)
         if not with_final:
             return b0, taps
-        bf = np.stack([it[2] for it in items], axis=0)  # (B,S,d)
+        bf = _stack_parts([it[2] for it in items], axis=0)  # (B,S,d)
         return b0, taps, bf
 
     def clear(self) -> None:
@@ -540,7 +579,10 @@ class CachePrefetcher:
 
     Yields one ``(b0, taps[, b_final])`` tuple per key-batch, in order —
     or ``None`` for a batch with a missing key (the consumer falls back
-    to the forward path). While a prefetcher is draining, the owning
+    to the forward path). With ``compressed=True`` each part is yielded
+    in its *storage* form (int8 entries as ``{"q", "scale"}`` dicts) so
+    the device transfer stays at integer width and the Pallas cached
+    step dequantizes in VMEM. While a prefetcher is draining, the owning
     thread must not mutate the cache except via ``put`` (both sides take
     the cache lock).
     """
@@ -556,12 +598,14 @@ class CachePrefetcher:
         depth: int = 2,
         to_device: bool = True,
         dtype=np.float32,
+        compressed: bool = False,
     ):
         self._cache = cache
         self._key_batches = list(key_batches)
         self._with_final = with_final
         self._to_device = to_device
         self._dtype = dtype
+        self._compressed = compressed
         self._q: queue.Queue = queue.Queue(maxsize=max(1, depth))
         self._err: Optional[BaseException] = None
         self._thread = threading.Thread(
@@ -573,9 +617,12 @@ class CachePrefetcher:
         try:
             for keys in self._key_batches:
                 got = self._cache.get_batch(
-                    keys, with_final=self._with_final, dtype=self._dtype
+                    keys, with_final=self._with_final, dtype=self._dtype,
+                    compressed=self._compressed,
                 )
                 if got is not None and self._to_device:
+                    # device_put handles the storage-form pytrees too
+                    # ({"q","scale"} dicts ship at integer width)
                     got = tuple(jax.device_put(g) for g in got)
                 self._q.put(got)
         except BaseException as e:  # surfaced on the consumer side

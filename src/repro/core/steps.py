@@ -81,34 +81,111 @@ def pac_train_step(
     return loss, adapter_params, opt_state, (x, taps, b_final)
 
 
+def _cached_positions(cached_batch, cfg):
+    if "positions" in cached_batch:
+        return cached_batch["positions"]
+    B, S = cached_batch["labels"].shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if cfg.rope == "mrope":
+        positions = jnp.broadcast_to(positions, (3, B, S))
+    return positions
+
+
 def pac_cached_train_step(
-    backbone_params, adapter_params, opt_state, cached_batch, *, cfg, r: int = 8, lr=1e-3, clip=1.0
+    backbone_params, adapter_params, opt_state, cached_batch, *, cfg, r: int = 8,
+    lr=1e-3, clip=1.0, kernel_impl: str = "ref", interpret=None,
 ):
     """Epoch≥2 PAC+ step: backbone forward replaced by the activation cache.
 
     cached_batch: {"b0": (B,S,d), "taps": (n_p,B,S,d), "b_final": (B,S,d),
-                   "labels": (B,S), optional "positions"}.
+                   "labels": (B,S), optional "positions"}. Each activation
+    may arrive in its *storage* form — an f32/bf16 array, or the int8
+    ``{"q", "scale"}`` payload the cache hands out with
+    ``get_batch(compressed=True)`` — and is decompressed inside the step
+    (on-device), never eagerly on the host.
+
+    ``kernel_impl`` selects the compute path (`repro.kernels.cached_step`):
+    ``"ref"`` (default) is the dense jnp oracle — upcast to f32, full
+    (B,S,vocab) logits; ``"pallas"`` fuses the per-period dequant ×
+    down-projection × λ-mix in VMEM and streams the LM-head cross-entropy
+    blockwise, so neither the f32 taps nor the logits tensor are ever
+    fully resident. ``interpret=None`` auto-selects the Pallas
+    interpreter off-TPU (CI). Both paths produce matching losses/grads to
+    f32 tolerance (tests/test_cached_step.py).
+
     Only the LM head / final norm of ``backbone_params`` is read — the rest
     of the backbone can be released from memory (paper §IV-B memory win).
+    Jit with ``donate_argnums=(1, 2)`` to reuse the adapter/optimizer
+    buffers in place (they are returned updated).
     """
-    b0, taps, b_final = cached_batch["b0"], cached_batch["taps"], cached_batch["b_final"]
-    # cached entries may arrive in their storage dtype — the bf16 cache
-    # policy ships compressed tensors to the device (half the H2D bytes)
-    # and upcasts here; f32 entries make this a no-op
-    b0, taps, b_final = (x.astype(jnp.float32) for x in (b0, taps, b_final))
-    B, S = b0.shape[:2]
-    if "positions" in cached_batch:
-        positions = cached_batch["positions"]
-    else:
-        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
-        if cfg.rope == "mrope":
-            positions = jnp.broadcast_to(positions, (3, B, S))
+    from repro.kernels.cached_step import cached_loss_parts
+
+    positions = _cached_positions(cached_batch, cfg)
 
     def loss_fn(ap):
-        logits = pac_logits(backbone_params, ap, cfg, b0, taps, b_final, positions, r)
-        return cross_entropy(logits, cached_batch["labels"])
+        num, den = cached_loss_parts(
+            backbone_params, ap, cfg, cached_batch, positions, r,
+            impl=kernel_impl, interpret=interpret,
+        )
+        return num / jnp.maximum(den, 1)
 
     loss, grads = jax.value_and_grad(loss_fn)(adapter_params)
+    grads, _ = clip_by_global_norm(grads, clip)
+    adapter_params, opt_state = adamw_update(adapter_params, grads, opt_state, lr=lr)
+    return loss, adapter_params, opt_state
+
+
+def dp_cached_train_step(
+    backbone_params, adapter_params, opt_state, cached_batch, *, cfg, mesh,
+    batch_axes, r: int = 8, lr=1e-3, clip=1.0, kernel_impl: str = "pallas",
+    interpret=None,
+):
+    """Epoch≥2 cached step, data-parallel over ``batch_axes`` of ``mesh``
+    via an explicit shard_map — the DP twin of :func:`pac_cached_train_step`
+    for the Pallas path (whose ``pallas_call``s GSPMD cannot repartition;
+    the ref path can instead be jitted with
+    ``launch.sharding.cached_step_shardings``).
+
+    Per shard: local (num, den) CE parts from the fused loss, psum'd over
+    ``batch_axes`` before the division (exact global mean); adapter grads
+    pmean'd (the psum's transpose re-sums the replicated cotangent, so the
+    mean removes the axes× factor — same argument as the pipeline step).
+    The update is replicated. ``batch_axes`` must shard the batch dim of
+    every cached entry (use ``launch.sharding.cached_batch_axes``).
+    """
+    from repro.kernels.cached_step import cached_loss_parts
+    from repro.launch.sharding import batch_specs
+
+    axes = tuple(batch_axes)
+
+    def spmd(ap, bp, cached):
+        positions = _cached_positions(cached, cfg)
+
+        def loss_fn(a):
+            num, den = cached_loss_parts(
+                bp, a, cfg, cached, positions, r,
+                impl=kernel_impl, interpret=interpret,
+            )
+            num = jax.lax.psum(num, axes)
+            den = jax.lax.psum(den, axes)
+            return num / jnp.maximum(den, 1)
+
+        loss, grads = jax.value_and_grad(loss_fn)(ap)
+        grads = jax.tree.map(lambda g: jax.lax.pmean(g, axes), grads)
+        return loss, grads
+
+    # shard_seq=False: the psums above reduce over batch_axes only, so a
+    # `model`-axis sequence split of the entries would silently drop
+    # every other shard's tokens from the loss
+    cspecs = batch_specs(cached_batch, mesh, batch_axes=axes, shard_seq=False)
+    fn = shard_map(
+        spmd,
+        mesh=mesh,
+        in_specs=(P(), P(), cspecs),
+        out_specs=(P(), P()),
+        check_rep=False,
+    )
+    loss, grads = fn(adapter_params, backbone_params, cached_batch)
     grads, _ = clip_by_global_norm(grads, clip)
     adapter_params, opt_state = adamw_update(adapter_params, grads, opt_state, lr=lr)
     return loss, adapter_params, opt_state

@@ -1,3 +1,31 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Each kernel has a pure-jnp oracle in :mod:`repro.kernels.ref` and is
+allclose-pinned to it in ``tests/test_kernels.py`` /
+``tests/test_cached_step.py``. Shared conventions:
+
+* **interpret escape hatch** — every kernel takes ``interpret=``; pass
+  ``True`` off-TPU (CI does, everywhere) to run the kernel body through
+  the Pallas interpreter: bit-accurate, not fast. The ``ops``/
+  ``cached_step`` wrappers auto-select on ``jax.default_backend()``.
+* **ragged shapes** — public entry points either pad-and-slice
+  non-divisible dims (``adapter_fuse``, everything in ``cached_step``)
+  or clamp block sizes and assert divisibility (``quant_matmul``,
+  ``flash_attention`` — their callers control the shapes); each
+  docstring says which.
+* **dtypes** — inputs may be f32/bf16 (plus int8 payloads where
+  documented); the MXU accumulates in f32
+  (``preferred_element_type``) and outputs cast back at the epilogue.
+
+Modules:
+
+* ``cached_step`` — the epoch≥2 hot path: fused dequant×adapter λ-mix
+  + blockwise LM-head cross-entropy, with custom VJPs (this is what
+  ``--kernels pallas`` runs).
+* ``quant_matmul`` — ``x @ dequant(Wq)`` for INT8/INT4 block-absmax
+  weights (paper §IV-D).
+* ``adapter_fuse`` — single λ-mix combine for f32 taps.
+* ``flash_attention`` — causal/windowed/soft-capped attention.
+* ``ops`` — jit'd public wrappers with CPU (ref) fallbacks.
+* ``ref`` — the jnp oracles.
+"""

@@ -53,7 +53,17 @@ def adapter_fuse(
     bk: int = 512,
     interpret: bool = False,
 ) -> jax.Array:
-    """b: (T, d); w_down: (d, da); a: (T, da); lam: () f32 → (T, da)."""
+    """Fused ``λ · (b @ w_down) + (1 − λ) · a`` → (T, da), in b.dtype.
+
+    b: (T, d) f32/bf16; w_down: (d, da) f32/bf16; a: (T, da); lam: ()
+    f32 (SMEM scalar). Block sizes ``bt/bj/bk`` tile (T, da, d); each is
+    clamped to its dim, then every dim is zero-padded up to its block
+    multiple and the result sliced back — ragged shapes (e.g. --seq 100)
+    are fine. Accumulation is f32 on the MXU regardless of input dtype.
+    ``interpret=True`` runs the Pallas interpreter (CPU/CI; bit-accurate,
+    slow). For *compressed* taps and the custom-VJP training path use
+    :func:`repro.kernels.cached_step.dq_adapter_mix` instead.
+    """
     T, d = b.shape
     da = w_down.shape[1]
     bt, bj, bk = min(bt, T), min(bj, da), min(bk, d)

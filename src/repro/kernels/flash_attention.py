@@ -85,7 +85,19 @@ def flash_attention_tpu(
     bk: int = 256,
     interpret: bool = False,
 ) -> jax.Array:
-    """q, k, v: (BH, S, hd) — batch·heads flattened, GQA repeat applied."""
+    """Blocked online-softmax attention → (BH, Sq, hd) in q.dtype.
+
+    q, k, v: (BH, S, hd) f32/bf16 — batch·heads flattened, GQA repeat
+    already applied. ``causal``/``window``/``attn_softcap`` select the
+    masking/softcap variants (gemma2 local layers, grok softcap).
+
+    Block sizes ``bq/bk`` tile (Sq, Sk); they are clamped to the dims
+    and then **asserted** to divide them (no pad-and-slice here — the
+    serving shapes are powers of two; ``ops.flash_attention`` is the
+    auto-selecting wrapper). Softmax state is carried in f32 VMEM
+    scratch across K steps. ``interpret=True`` runs the Pallas
+    interpreter off-TPU (bit-accurate, slow — the CI path).
+    """
     BH, Sq, hd = q.shape
     Sk = k.shape[1]
     bq, bk = min(bq, Sq), min(bk, Sk)

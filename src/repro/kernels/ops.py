@@ -1,11 +1,16 @@
 """jit'd public wrappers for the Pallas kernels.
 
-On TPU these call the real kernels; on CPU they run in ``interpret=True``
-mode (the kernel body executed step-by-step in Python/XLA — bit-accurate
-for validation, not for speed). ``use_kernels(False)`` routes everything
-to the jnp reference implementations instead (the default inside the big
-jnp model code, where XLA fusion is already adequate and kernels are an
-opt-in perf feature).
+On TPU these call the real kernels; on CPU the kernels would run in
+``interpret=True`` mode (bit-accurate, not fast), so by default the CPU
+path routes to the jnp reference implementations instead — kernels are
+an opt-in perf feature inside the big jnp model code, where XLA fusion
+is already adequate. Pass ``force_kernel=True`` to exercise the Pallas
+body anyway (what the kernel tests do).
+
+The *cached-epoch training* kernels (fused dequant×adapter λ-mix and
+blockwise LM-head CE, with custom VJPs) live in
+:mod:`repro.kernels.cached_step` and are selected by the trainer's
+``--kernels pallas`` switch rather than wrapped here.
 """
 
 from __future__ import annotations

@@ -66,8 +66,20 @@ def quant_matmul(
     bk: int = 256,
     interpret: bool = False,
 ) -> jax.Array:
-    """x: (M, K) f32; q: (K, N) int8 or (K, N//2) packed int4;
-    scale: (K, N // QBLOCK) f32. Returns (M, N) in x.dtype."""
+    """``x @ dequant(q, scale)`` with in-VMEM dequantisation → (M, N).
+
+    x: (M, K) f32/bf16; q: (K, N) int8 or (K, N//2) packed int4 nibbles;
+    scale: (K, N // QBLOCK) f32 per-(row, 128-col-block) absmax scales —
+    the exact storage format of ``core.quantization.quantize(block=128)``.
+    Returns (M, N) in x.dtype; MXU accumulation is f32.
+
+    Block-size constraints (asserted, *not* padded — the weight shapes
+    are static and callers align them): ``bn % QBLOCK == 0`` so a weight
+    tile covers whole quantization blocks, and after clamping to the
+    dims, ``bm | M``, ``bn | N``, ``bk | K``. ``interpret=True`` runs
+    the Pallas interpreter off-TPU (CI path; see ``ops.quant_matmul``
+    for the auto-selecting wrapper that also slices padding off N).
+    """
     M, K = x.shape
     N = scale.shape[1] * QBLOCK
     assert bn % QBLOCK == 0, "bn must cover whole quantization blocks"

@@ -21,6 +21,27 @@ def adapter_fuse_ref(b: jax.Array, w_down: jax.Array, a: jax.Array, lam) -> jax.
     return (lam * (b @ w_down) + (1.0 - lam) * a).astype(b.dtype)
 
 
+def dq_adapter_mix_ref(b, w_down: jax.Array, a: jax.Array, lam, orig_last: int) -> jax.Array:
+    """Eager twin of `cached_step.dq_adapter_mix`: decompress the cache
+    entry to f32, dense matmul, λ-mix; result in a.dtype."""
+    from repro.kernels.cached_step import entry_to_f32
+
+    x = entry_to_f32(b, orig_last)
+    lam = jnp.asarray(lam, jnp.float32)
+    out = lam * (x @ w_down.astype(jnp.float32)) + (1.0 - lam) * a.astype(jnp.float32)
+    return out.astype(a.dtype)
+
+
+def lmhead_ce_ref(h: jax.Array, w: jax.Array, labels: jax.Array, softcap=None) -> jax.Array:
+    """Full-logits per-token NLL (the (T, V) tensor this oracle
+    materialises is exactly what `cached_step.lmhead_ce` avoids)."""
+    logits = h.astype(jnp.float32) @ w.astype(jnp.float32)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32), axis=1)[:, 0]
+
+
 def flash_attention_ref(
     q: jax.Array,
     k: jax.Array,

@@ -53,14 +53,19 @@ def param_specs(params, mesh: Mesh):
     )
 
 
-def batch_specs(batch, mesh: Mesh, shard_batch: bool = True, batch_axes=None):
+def batch_specs(batch, mesh: Mesh, shard_batch: bool = True, batch_axes=None,
+                shard_seq: bool = True):
     """Specs for a training/serving batch dict.
 
     ``batch_axes`` overrides the default ``data_axes(mesh)`` — e.g. the
     epoch≥2 cached phase shards over the pipeline axis too (the whole
-    pool is pure-DP once the backbone no longer runs)."""
+    pool is pure-DP once the backbone no longer runs). ``shard_seq=False``
+    keeps the sequence dim of cached activations replicated even on a
+    ``model``-axis mesh — required by shard_map consumers that reduce
+    over the batch axes only (``steps.dp_cached_train_step``)."""
     dp = tuple(batch_axes) if batch_axes is not None else data_axes(mesh)
     dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
+    seq_ok = shard_seq and "model" in mesh.axis_names
 
     def spec_for(path, leaf):
         names = _path_names(path)
@@ -73,11 +78,11 @@ def batch_specs(batch, mesh: Mesh, shard_batch: bool = True, batch_axes=None):
         if name == "embeds":
             return P(B_axis, None, None)
         if name in ("b0", "b_final"):  # cached activations: S over `model`
-            sq = "model" if ("model" in mesh.axis_names and leaf.shape[1] % mesh.shape["model"] == 0) else None
-            return P(B_axis, sq, None)
+            sq = "model" if (seq_ok and leaf.shape[1] % mesh.shape["model"] == 0) else None
+            return P(*((B_axis, sq) + (None,) * (leaf.ndim - 2)))
         if name == "taps":
-            sq = "model" if ("model" in mesh.axis_names and leaf.shape[2] % mesh.shape["model"] == 0) else None
-            return P(None, B_axis, sq, None)
+            sq = "model" if (seq_ok and leaf.shape[2] % mesh.shape["model"] == 0) else None
+            return P(*((None, B_axis, sq) + (None,) * (leaf.ndim - 3)))
         return P(*((None,) * leaf.ndim))
 
     return compat.tree_map_with_path(spec_for, batch)
@@ -134,21 +139,31 @@ def replicated(tree, mesh: Mesh):
     return compat.tree_map(lambda _: s, tree)
 
 
+def cached_batch_axes(cached_batch, mesh: Mesh) -> tuple:
+    """Mesh axes the epoch≥2 cached batch shards over: the data axes,
+    *plus* the pipeline ``stage`` axis when the batch divides — the
+    backbone no longer runs from epoch 2, so the whole pool
+    data-parallels instead of the stage devices duplicating work. The
+    shared contract behind :func:`cached_step_shardings` and the
+    shard_map-based ``steps.dp_cached_train_step``."""
+    axes = list(data_axes(mesh))
+    if "stage" in mesh.axis_names:
+        B = cached_batch["labels"].shape[0]
+        pool = int(np.prod([mesh.shape[a] for a in axes + ["stage"]]))
+        if B % pool == 0:
+            axes.append("stage")
+    return tuple(axes)
+
+
 def cached_step_shardings(backbone, adapter, opt_state, cached_batch, mesh: Mesh):
     """in_shardings for the epoch≥2 pure-DP cached step
     (``pac_cached_train_step(backbone, adapter, opt, cached_batch)``):
     params/optimizer replicated, the cached activation batch sharded over
-    the data axes — *including* the pipeline ``stage`` axis when the
-    batch divides (the backbone no longer runs from epoch 2, so the whole
-    pool data-parallels instead of the stage devices duplicating work).
-    One definition of the cached-batch sharding contract, shared by the
-    trainer, benchmarks, and examples."""
-    axes = list(data_axes(mesh))
-    if "stage" in mesh.axis_names:
-        B = cached_batch["b0"].shape[0]
-        pool = int(np.prod([mesh.shape[a] for a in axes + ["stage"]]))
-        if B % pool == 0:
-            axes.append("stage")
+    :func:`cached_batch_axes`. Handles compressed entries — an int8
+    ``{"q", "scale"}`` leaf pair inherits the batch layout of the tensor
+    it stores. One definition of the cached-batch sharding contract,
+    shared by the trainer, benchmarks, and examples."""
+    axes = list(cached_batch_axes(cached_batch, mesh))
     return (
         replicated(backbone, mesh),
         replicated(adapter, mesh),

@@ -51,6 +51,18 @@ corpus, or the compression policy invalidates the cache loudly.
 
     PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
         --reduced --cache-dir act_cache --cache-compress int8
+
+With ``--kernels pallas`` the cached (epoch≥2) step runs the fused
+Pallas fast path (`repro.kernels.cached_step`): cache entries reach the
+step in their *storage* form (int8 payload + scales, bf16) and are
+dequantised in VMEM inside the fused dequant×adapter kernel, and the
+LM-head cross-entropy streams over vocab blocks so the (B,S,vocab)
+logits are never materialised. Off-TPU the kernels run in interpreter
+mode (bit-accurate, not fast) — the default ``--kernels ref`` is the
+dense jnp oracle the Pallas path is tested against.
+
+    PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
+        --reduced --cache-compress int8 --kernels pallas
 """
 
 from __future__ import annotations
@@ -63,9 +75,18 @@ import numpy as np
 
 from repro import compat
 
+_EPILOG = """\
+Full flag reference with one runnable example per flag: docs/CLI.md.
+Module→paper map and the data-flow of an epoch-1 vs cached epoch:
+docs/ARCHITECTURE.md.
+"""
+
 
 def main() -> None:
-    ap = argparse.ArgumentParser(description=__doc__)
+    ap = argparse.ArgumentParser(
+        description=__doc__, epilog=_EPILOG,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
     ap.add_argument("--arch", default="internlm2-1.8b")
     ap.add_argument("--reduced", action="store_true", help="CPU-scale variant")
     ap.add_argument("--epochs", type=int, default=3)
@@ -104,6 +125,12 @@ def main() -> None:
     ap.add_argument("--calibrate", action="store_true",
                     help="price one lowered period with the HLO cost model "
                          "and plan from measured LayerCosts")
+    ap.add_argument("--kernels", default="ref", choices=["ref", "pallas"],
+                    help="cached-epoch compute path: 'ref' = dense jnp "
+                         "oracle; 'pallas' = fused dequant×adapter + "
+                         "blockwise-CE kernels (interpret mode off-TPU), "
+                         "with compressed cache entries decompressed "
+                         "on-device instead of on the host")
     args = ap.parse_args()
 
     plan_mode = args.plan is not None
@@ -303,8 +330,17 @@ def main() -> None:
         cache = ActivationCache(budget_bytes=cache_budget,
                                 compress=args.cache_compress)
 
+    # compressed handoff: with the Pallas kernels the cache skips host-side
+    # decompression — int8 entries ship as {"q", "scale"} payloads and are
+    # dequantised in VMEM inside the fused cached step
+    use_pallas = args.kernels == "pallas"
     step1 = jax.jit(functools.partial(steps.pac_train_step, cfg=cfg, r=args.r, lr=args.lr))
-    stepN = jax.jit(functools.partial(steps.pac_cached_train_step, cfg=cfg, r=args.r, lr=args.lr))
+    # donate (adapter, opt) — the cached step returns them updated, so the
+    # old buffers can be reused in place every step of a cached epoch
+    stepN = jax.jit(
+        functools.partial(steps.pac_cached_train_step, cfg=cfg, r=args.r,
+                          lr=args.lr, kernel_impl=args.kernels),
+        donate_argnums=(1, 2))
     if distributed:
         # epoch-1: staged backbone forward over `stage` + dp AllReduce
         step1 = jax.jit(functools.partial(
@@ -324,7 +360,8 @@ def main() -> None:
                 # decompresses/loads batch k+1 (and starts its
                 # host→device copy) while step k runs
                 prefetch = CachePrefetcher(
-                    cache, order, to_device=not distributed, dtype=None)
+                    cache, order, to_device=not distributed, dtype=None,
+                    compressed=use_pallas)
         for batch in pipe.epoch(epoch):
             ids = batch.pop("seq_ids")
             if prefetch is not None:
@@ -332,26 +369,40 @@ def main() -> None:
             elif args.no_cache:
                 hit = None
             else:
-                hit = cache.get_batch(ids, with_final=True, dtype=None)
+                hit = cache.get_batch(ids, with_final=True, dtype=None,
+                                      compressed=use_pallas)
             if hit is None:
                 loss, adapter, opt, (b0, taps, bf) = step1(bq, adapter, opt, batch)
                 if not args.no_cache:
                     cache.put_batch(ids, b0, taps, bf)
             else:
                 used_cache = True
-                b0, taps, bf = hit
+                b0, taps, bf = (jax.tree.map(jnp.asarray, h) for h in hit)
                 cached = {
-                    "b0": jnp.asarray(b0),
-                    "taps": jnp.asarray(taps),
-                    "b_final": jnp.asarray(bf),
+                    "b0": b0,
+                    "taps": taps,
+                    "b_final": bf,
                     "labels": batch["labels"],
                 }
                 if stepN is None:  # epoch≥2 distributed: *pure* DP over the mesh
-                    stepN = jax.jit(
-                        functools.partial(steps.pac_cached_train_step,
-                                          cfg=cfg, r=args.r, lr=args.lr),
-                        in_shardings=shard.cached_step_shardings(
-                            bq, adapter, opt, cached, mesh))
+                    if use_pallas:
+                        # GSPMD cannot repartition pallas_call — the DP
+                        # twin shard_maps the fused step over the pool
+                        stepN = jax.jit(
+                            functools.partial(
+                                steps.dp_cached_train_step, cfg=cfg,
+                                mesh=mesh, r=args.r, lr=args.lr,
+                                kernel_impl="pallas",
+                                batch_axes=shard.cached_batch_axes(
+                                    cached, mesh)),
+                            donate_argnums=(1, 2))
+                    else:
+                        stepN = jax.jit(
+                            functools.partial(steps.pac_cached_train_step,
+                                              cfg=cfg, r=args.r, lr=args.lr),
+                            in_shardings=shard.cached_step_shardings(
+                                bq, adapter, opt, cached, mesh),
+                            donate_argnums=(1, 2))
                 loss, adapter, opt = stepN(bq, adapter, opt, cached)
             losses.append(float(loss))
         dt = time.time() - t0

@@ -173,14 +173,19 @@ def backbone_forward(params, cfg, batch: dict, collect_taps: bool = False,
     return x, taps
 
 
+def head_weight(params, cfg):
+    """The (d, vocab) LM-head matrix: tied embedding transpose or the
+    dedicated head, dequantized — the one definition shared by
+    :func:`logits_from_hidden` and the fused cached-step CE kernel."""
+    if cfg.tie_embeddings:
+        return maybe_dequantize_tree(params["embed"]).T
+    return maybe_dequantize_tree(params["lm_head"])
+
+
 def logits_from_hidden(params, cfg, h):
     p_norm = maybe_dequantize_tree(params["final_norm"])
     h = rms_norm(h, p_norm, cfg.norm_eps)
-    if cfg.tie_embeddings:
-        w = maybe_dequantize_tree(params["embed"]).T
-    else:
-        w = maybe_dequantize_tree(params["lm_head"])
-    logits = h @ w
+    logits = h @ head_weight(params, cfg)
     return softcap(logits, cfg.logit_softcap)
 
 

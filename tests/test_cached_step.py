@@ -1,0 +1,258 @@
+"""ISSUE 5 acceptance: the fused Pallas cached-epoch step.
+
+Interpret-mode equivalence of ``pac_cached_train_step(kernel_impl=
+"pallas")`` against the ref oracle for every cache compression policy,
+unit tests for the two new kernels (fused dequant×adapter λ-mix,
+blockwise LM-head cross-entropy), the no-eager-upcast guard on the
+compressed cache handoff, and a trainer-CLI subprocess check that
+``--kernels pallas`` and ``--kernels ref`` converge to matching losses.
+"""
+
+import functools
+import os
+import re
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import steps
+from repro.core.activation_cache import ActivationCache
+from repro.core.quantization import quantize
+from repro.kernels import ref
+from repro.kernels.cached_step import dq_adapter_mix, lmhead_ce
+from repro.optim import adamw_init
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# dq_adapter_mix: fused dequant × down-projection × λ-mix
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("storage", ["f32", "bf16", "int8"])
+@pytest.mark.parametrize("T,d,da", [(64, 256, 32), (100, 130, 17), (7, 300, 40)])
+def test_dq_adapter_mix_forward(storage, T, d, da):
+    """All three storage forms, block-aligned and ragged shapes."""
+    b = jax.random.normal(KEY, (T, d))
+    w = jax.random.normal(jax.random.fold_in(KEY, 1), (d, da)) * 0.1
+    a = jax.random.normal(jax.random.fold_in(KEY, 2), (T, da))
+    lam = jnp.float32(0.7)
+    if storage == "bf16":
+        b = b.astype(jnp.bfloat16)
+    elif storage == "int8":
+        qt = quantize(b, bits=8, block=128)
+        b = {"q": qt.q, "scale": qt.scale}
+    out = dq_adapter_mix(b, w, a, lam, interpret=True)
+    want = ref.dq_adapter_mix_ref(b, w, a, lam, d)
+    assert out.shape == (T, da) and out.dtype == a.dtype
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        atol=1e-4, rtol=1e-4,
+    )
+
+
+@pytest.mark.parametrize("storage", ["f32", "bf16", "int8"])
+def test_dq_adapter_mix_grads(storage):
+    """Custom-VJP grads wrt (w_down, a, λ) match jnp autodiff of the ref;
+    the cache entry itself is a constant (zero cotangent)."""
+    T, d, da = 48, 256, 24
+    b = jax.random.normal(KEY, (T, d))
+    w = jax.random.normal(jax.random.fold_in(KEY, 3), (d, da)) * 0.1
+    a = jax.random.normal(jax.random.fold_in(KEY, 4), (T, da))
+    if storage == "bf16":
+        b = b.astype(jnp.bfloat16)
+    elif storage == "int8":
+        qt = quantize(b, bits=8, block=128)
+        b = {"q": qt.q, "scale": qt.scale}
+
+    def loss_k(w_, a_, l_):
+        return jnp.sum(jnp.sin(dq_adapter_mix(b, w_, a_, l_, interpret=True)))
+
+    def loss_r(w_, a_, l_):
+        return jnp.sum(jnp.sin(ref.dq_adapter_mix_ref(b, w_, a_, l_, d)))
+
+    gk = jax.jit(jax.grad(loss_k, argnums=(0, 1, 2)))(w, a, jnp.float32(0.3))
+    gr = jax.grad(loss_r, argnums=(0, 1, 2))(w, a, jnp.float32(0.3))
+    for got, want in zip(gk, gr):
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            atol=2e-4, rtol=1e-3,
+        )
+
+
+# ---------------------------------------------------------------------------
+# lmhead_ce: blockwise softmax-cross-entropy
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "T,d,V,cap", [(64, 128, 512, None), (50, 96, 300, 30.0), (8, 64, 1000, None)]
+)
+def test_lmhead_ce_forward_and_grad(T, d, V, cap):
+    """Online-softmax NLL and its dh match the full-logits oracle —
+    including ragged vocab (masked padding) and tanh soft-capping."""
+    h = jax.random.normal(KEY, (T, d))
+    w = jax.random.normal(jax.random.fold_in(KEY, 5), (d, V)) * 0.05
+    lab = jax.random.randint(jax.random.fold_in(KEY, 6), (T,), 0, V)
+    nll = lmhead_ce(h, w, lab, softcap=cap, interpret=True)
+    want = ref.lmhead_ce_ref(h, w, lab, softcap=cap)
+    np.testing.assert_allclose(
+        np.asarray(nll), np.asarray(want), atol=2e-5, rtol=1e-5
+    )
+    gk = jax.grad(
+        lambda h_: jnp.sum(jnp.cos(lmhead_ce(h_, w, lab, softcap=cap, interpret=True)))
+    )(h)
+    gr = jax.grad(
+        lambda h_: jnp.sum(jnp.cos(ref.lmhead_ce_ref(h_, w, lab, softcap=cap)))
+    )(h)
+    np.testing.assert_allclose(np.asarray(gk), np.asarray(gr), atol=1e-5, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Full cached step: pallas vs ref, per cache policy
+# ---------------------------------------------------------------------------
+
+
+def _cached_from_cache(policy, b0, taps, bf, labels, compressed):
+    cache = ActivationCache(budget_bytes=1 << 30, compress=policy)
+    ids = list(range(b0.shape[0]))
+    cache.put_batch(ids, b0, taps, bf)
+    hit = cache.get_batch(ids, with_final=True, dtype=None, compressed=compressed)
+    cb0, ct, cbf = (jax.tree.map(jnp.asarray, h) for h in hit)
+    return {"b0": cb0, "taps": ct, "b_final": cbf, "labels": labels}
+
+
+@pytest.mark.parametrize("policy", ["f32", "bf16", "int8"])
+def test_pallas_cached_step_matches_ref_per_policy(
+    tiny_cfg, tiny_backbone, tiny_adapter, tiny_batch, policy
+):
+    """ISSUE 5 acceptance: the fused step on *storage-form* entries
+    matches the ref oracle on the same entries — loss, adapter grads,
+    and post-update params — in interpret mode."""
+    cfg, bp, ap, batch = tiny_cfg, tiny_backbone, tiny_adapter, tiny_batch
+    opt = adamw_init(ap)
+    _, _, _, (b0, taps, bf) = steps.pac_train_step(bp, ap, opt, batch, cfg=cfg, r=4)
+
+    cached_c = _cached_from_cache(policy, b0, taps, bf, batch["labels"], True)
+    cached_d = _cached_from_cache(policy, b0, taps, bf, batch["labels"], False)
+
+    # the compressed handoff: int8 entries reach the step as integer
+    # payloads + scales, bf16 as bf16 — never an eager f32 upcast
+    if policy == "int8":
+        assert isinstance(cached_c["taps"], dict)
+        assert cached_c["taps"]["q"].dtype == jnp.int8
+        assert cached_c["b0"]["q"].dtype == jnp.int8
+    elif policy == "bf16":
+        assert cached_c["taps"].dtype == jnp.bfloat16
+
+    step_ref = jax.jit(functools.partial(
+        steps.pac_cached_train_step, cfg=cfg, r=4, kernel_impl="ref"))
+    step_pal = jax.jit(functools.partial(
+        steps.pac_cached_train_step, cfg=cfg, r=4, kernel_impl="pallas"))
+
+    loss_ref, ap_ref, _ = step_ref(bp, ap, opt, cached_c)
+    loss_pal, ap_pal, _ = step_pal(bp, ap, opt, cached_c)
+    # ref on compressed entries == ref on host-decompressed entries
+    # (the handoff changes where dequant runs, not its result)
+    loss_ref_d, _, _ = step_ref(bp, ap, opt, cached_d)
+    assert abs(float(loss_ref) - float(loss_ref_d)) < 1e-5
+
+    assert abs(float(loss_ref) - float(loss_pal)) < 2e-5
+    for a, b in zip(jax.tree.leaves(ap_ref), jax.tree.leaves(ap_pal)):
+        d = float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+        assert d < 5e-5, d
+
+    # gradient-level equivalence (post-update params can mask per-leaf
+    # differences behind AdamW's eps)
+    from repro.kernels.cached_step import cached_loss_parts
+
+    B, S = batch["labels"].shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def grads(impl):
+        def loss_fn(a):
+            num, den = cached_loss_parts(
+                bp, a, cfg, cached_c, positions, 4, impl=impl, interpret=True
+            )
+            return num / jnp.maximum(den, 1)
+
+        return jax.grad(loss_fn)(ap)
+
+    g_ref, g_pal = grads("ref"), grads("pallas")
+    gmax = max(float(jnp.max(jnp.abs(g))) for g in jax.tree.leaves(g_ref))
+    for a, b in zip(jax.tree.leaves(g_ref), jax.tree.leaves(g_pal)):
+        d = float(jnp.max(jnp.abs(a - b)))
+        assert d <= 1e-4 * max(1.0, gmax), (d, gmax)
+
+
+def test_prefetcher_compressed_handoff(tiny_cfg, tiny_backbone, tiny_adapter, tiny_batch):
+    """The prefetcher's compressed mode yields storage-form batches in
+    epoch order — int8 payloads stay int8 all the way to the step."""
+    from repro.core.activation_cache import CachePrefetcher
+
+    cfg, bp, ap, batch = tiny_cfg, tiny_backbone, tiny_adapter, tiny_batch
+    opt = adamw_init(ap)
+    _, _, _, (b0, taps, bf) = steps.pac_train_step(bp, ap, opt, batch, cfg=cfg, r=4)
+    cache = ActivationCache(budget_bytes=1 << 30, compress="int8")
+    B = b0.shape[0]
+    cache.put_batch(list(range(B)), b0, taps, bf)
+    pf = CachePrefetcher(
+        cache, [np.arange(B, dtype=np.int32)], compressed=True, to_device=True
+    )
+    got = next(pf)
+    assert got is not None
+    cb0, ct, cbf = got
+    assert isinstance(ct, dict) and ct["q"].dtype == jnp.int8
+    assert ct["q"].shape[:1] == (cfg.n_periods,)
+    pf.close()
+    # and the pallas step consumes the prefetched batch directly
+    cached = {"b0": cb0, "taps": ct, "b_final": cbf, "labels": batch["labels"]}
+    loss, _, _ = steps.pac_cached_train_step(
+        bp, ap, opt, cached, cfg=cfg, r=4, kernel_impl="pallas", interpret=True
+    )
+    assert np.isfinite(float(loss))
+
+
+# ---------------------------------------------------------------------------
+# Trainer CLI: --kernels pallas vs ref converge to matching losses
+# ---------------------------------------------------------------------------
+
+
+def _run_cli(*extra):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--reduced",
+         "--epochs", "3", "--steps-per-epoch", "2", "--batch", "2",
+         "--seq", "16", *extra],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def _losses(stdout):
+    return [float(m) for m in re.findall(r"epoch \d+: loss=([0-9.]+)", stdout)]
+
+
+@pytest.mark.parametrize("compress", ["f32", "int8"])
+def test_cli_kernels_pallas_matches_ref(compress):
+    """ISSUE 5 acceptance: a full trainer run with --kernels pallas
+    converges to the same per-epoch losses as --kernels ref (exactly the
+    same cache entries feed both; epochs ≥1 exercise the cached step)."""
+    ref_out = _run_cli("--cache-compress", compress, "--kernels", "ref")
+    pal_out = _run_cli("--cache-compress", compress, "--kernels", "pallas")
+    l_ref, l_pal = _losses(ref_out), _losses(pal_out)
+    assert len(l_ref) == 3 and len(l_pal) == 3
+    # epoch 0 is the uncached forward — identical by construction; the
+    # cached epochs must agree to f32 tolerance across compute paths
+    for a, b in zip(l_ref, l_pal):
+        assert abs(a - b) < 5e-4, (l_ref, l_pal)
+    # sanity: training is actually learning (losses decrease)
+    assert l_ref[-1] < l_ref[0] and l_pal[-1] < l_pal[0]

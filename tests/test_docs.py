@@ -1,0 +1,75 @@
+"""Fast tier-1 leg of the docs CI: link integrity + block extraction.
+
+The CI ``docs`` job additionally *executes* the marked blocks
+(``python tools/check_docs.py --exec``); here we keep the cheap
+invariants in every local run: no broken relative links anywhere, and
+the extraction machinery actually finds the marked blocks (an
+accidentally reformatted marker would otherwise silently stop the CI
+job from executing anything).
+"""
+
+import os
+import sys
+
+_TOOLS = os.path.join(os.path.dirname(__file__), "..", "tools")
+sys.path.insert(0, _TOOLS)
+
+import check_docs  # noqa: E402
+
+
+def test_no_broken_relative_links():
+    bad = {}
+    for path in check_docs.doc_files():
+        broken = check_docs.check_links(path)
+        if broken:
+            bad[os.path.relpath(path, check_docs.REPO)] = broken
+    assert not bad, f"broken relative links: {bad}"
+
+
+def test_docs_cover_readme_and_docs_dir():
+    files = [os.path.relpath(p, check_docs.REPO) for p in check_docs.doc_files()]
+    assert "README.md" in files
+    assert os.path.join("docs", "ARCHITECTURE.md") in files
+    assert os.path.join("docs", "CLI.md") in files
+
+
+def test_marked_blocks_are_found():
+    """At least one executable block exists, and every marked block is
+    non-empty python (so the CI smoke actually runs something)."""
+    total = 0
+    for path in check_docs.doc_files():
+        for lineno, code in check_docs.extract_marked_blocks(path):
+            assert code.strip(), f"{path}:{lineno} empty marked block"
+            compile(code, f"{path}:{lineno}", "exec")  # syntax-checks only
+            total += 1
+    assert total >= 2  # README + ARCHITECTURE each carry one
+
+
+def test_marker_requires_adjacency():
+    """The mark only applies to the fence it directly precedes —
+    intervening prose cancels it (documented contract)."""
+    import tempfile
+
+    md = "\n".join([
+        check_docs.EXEC_MARK,
+        "",
+        "```python",
+        "x = 1",
+        "```",
+        check_docs.EXEC_MARK,
+        "some prose in between",
+        "```python",
+        "y = 2",
+        "```",
+        "```python",
+        "z = 3  # unmarked",
+        "```",
+    ])
+    with tempfile.NamedTemporaryFile("w", suffix=".md", delete=False) as f:
+        f.write(md)
+        path = f.name
+    try:
+        blocks = check_docs.extract_marked_blocks(path)
+        assert len(blocks) == 1 and blocks[0][1] == "x = 1"
+    finally:
+        os.unlink(path)

@@ -1,0 +1,130 @@
+"""Docs CI: smoke-execute marked code blocks + check relative links.
+
+Keeps README.md and docs/*.md from rotting silently:
+
+* **Marked-block smoke** — a fenced ```python block immediately preceded
+  by a ``<!-- docs-exec -->`` comment line is executed in a subprocess
+  with ``PYTHONPATH=src`` (only marked blocks: most doc snippets are
+  shell commands or illustrative fragments that are not meant to run
+  standalone). A block that raises fails the job with its file:line.
+* **Relative-link check** — every ``[text](path)`` markdown link that is
+  not http(s)/mailto/anchor must resolve to an existing file relative to
+  the document (trailing ``#fragment`` stripped).
+
+Usage:
+    python tools/check_docs.py            # link check only (fast; tier-1)
+    python tools/check_docs.py --exec     # + run marked blocks (CI docs job)
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+EXEC_MARK = "<!-- docs-exec -->"
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def doc_files(repo: str = REPO) -> list:
+    files = [os.path.join(repo, "README.md")]
+    docs = os.path.join(repo, "docs")
+    if os.path.isdir(docs):
+        files += sorted(
+            os.path.join(docs, f) for f in os.listdir(docs) if f.endswith(".md")
+        )
+    return [f for f in files if os.path.exists(f)]
+
+
+def extract_marked_blocks(path: str) -> list:
+    """[(lineno_of_fence, code)] for ```python fences preceded by the
+    EXEC_MARK comment (ignoring blank lines in between)."""
+    blocks = []
+    lines = open(path).read().splitlines()
+    marked = False
+    i = 0
+    while i < len(lines):
+        line = lines[i].strip()
+        if line == EXEC_MARK:
+            marked = True
+        elif line.startswith("```python") and marked:
+            start = i + 1
+            j = start
+            while j < len(lines) and not lines[j].strip().startswith("```"):
+                j += 1
+            blocks.append((start, "\n".join(lines[start:j])))
+            marked = False
+            i = j
+        elif line and not line.startswith("```"):
+            # any other content between mark and fence cancels the mark
+            if marked and line != EXEC_MARK:
+                marked = False
+        i += 1
+    return blocks
+
+
+def check_links(path: str) -> list:
+    """Broken relative links in one markdown file: [(lineno, target)]."""
+    bad = []
+    base = os.path.dirname(path)
+    for lineno, line in enumerate(open(path).read().splitlines(), 1):
+        for target in _LINK_RE.findall(line):
+            if re.match(r"^(https?:|mailto:|#)", target):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not os.path.exists(os.path.normpath(os.path.join(base, rel))):
+                bad.append((lineno, target))
+    return bad
+
+
+def run_block(code: str, timeout: int = 600) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, env=env, timeout=timeout, cwd=REPO,
+    )
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--exec", dest="do_exec", action="store_true",
+                    help="also smoke-execute the marked python blocks")
+    args = ap.parse_args()
+
+    failures = 0
+    n_links = n_blocks = 0
+    for path in doc_files():
+        rel = os.path.relpath(path, REPO)
+        bad = check_links(path)
+        n_links += 1
+        for lineno, target in bad:
+            print(f"BROKEN LINK {rel}:{lineno}: {target}", file=sys.stderr)
+            failures += 1
+        blocks = extract_marked_blocks(path)
+        n_blocks += len(blocks)
+        if args.do_exec:
+            for lineno, code in blocks:
+                proc = run_block(code)
+                if proc.returncode != 0:
+                    print(f"BLOCK FAILED {rel}:{lineno}:\n{proc.stderr[-2000:]}",
+                          file=sys.stderr)
+                    failures += 1
+                else:
+                    print(f"block OK {rel}:{lineno}")
+    mode = "exec" if args.do_exec else "links-only"
+    print(f"check_docs ({mode}): {n_links} files, {n_blocks} marked blocks, "
+          f"{failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
