@@ -186,41 +186,38 @@ def main_kernels(arch="t5-base-pac", B=8, S=64, out_json="BENCH_cached_step.json
 
 
 def main_distributed(arch="internlm2-1.8b", dp=2, stages=2, n_micro=None, B=8, S=64) -> list:
-    """Hybrid DP×PP step time vs single device (requires dp·stages devices;
-    call ``compat.force_host_device_count`` before any JAX compute)."""
-    from repro.launch.mesh import make_edge_mesh
-
-    n_micro = n_micro or stages
-    cfg = get_arch(arch).reduced()
-    mesh = make_edge_mesh(dp, stages)
-    bp = bb.init_backbone(jax.random.PRNGKey(0), cfg)
-    ap = init_adapter(jax.random.PRNGKey(3), cfg, r=8)
-    batch = make_batch(cfg, B, S)
-    out = []
-
-    t_pac = timeit(
-        jax.jit(functools.partial(steps.pac_train_step, cfg=cfg, r=8)),
-        bp, ap, adamw_init(ap), batch,
-    )
-    t_pipe = timeit(
-        jax.jit(functools.partial(
-            steps.pipeline_pac_train_step, cfg=cfg, mesh=mesh, n_micro=n_micro, r=8)),
-        bp, ap, adamw_init(ap), batch,
-    )
-    _, _, _, (b0, taps, bf) = steps.pac_train_step(bp, ap, adamw_init(ap), batch, cfg=cfg, r=8)
-    cached = {"b0": b0, "taps": taps, "b_final": bf, "labels": batch["labels"]}
-    from repro.launch import sharding as shard
-
-    import jax.numpy as jnp
+    """Hybrid DP×PP step time vs single device, measured through the
+    runtime layer: one :class:`~repro.runtime.EdgeSession` owns the pool
+    (fake host devices forced pre-backend), the mesh, the model state
+    and both compiled distributed steps; the per-step
+    :class:`~repro.runtime.StepEvent` wall clocks are the measurement —
+    what an epoch-1 minibatch (staged forward + cache fill) and a cached
+    pure-DP step actually pay. Run in its own process (the device count
+    locks at backend init)."""
     import numpy as np
 
-    cached = {k: jnp.asarray(np.asarray(v)) for k, v in cached.items()}
-    t_cached_dp = timeit(
-        jax.jit(functools.partial(steps.pac_cached_train_step, cfg=cfg, r=8),
-                in_shardings=shard.cached_step_shardings(
-                    bp, ap, adamw_init(ap), cached, mesh)),
-        bp, ap, adamw_init(ap), cached,
-    )
+    from repro.runtime import EdgeSession, EpochRunner, RunSpec, StepEvent
+
+    n_micro = n_micro or stages
+    # epochs=2: epoch 0 times the hybrid step, epoch 1 the cached step;
+    # 4 steps each = 1 compile + 3 timed (matches timeit's median-of-3)
+    spec = RunSpec(
+        arch=arch, reduced=True, epochs=2, steps_per_epoch=4, batch=B,
+        seq=S, r=8, init="random", dp=dp, stages=stages, micro=n_micro)
+    walls, out = {}, []
+    with EdgeSession(spec) as s:
+        for ev in EpochRunner(s).events():
+            if isinstance(ev, StepEvent):
+                walls.setdefault(ev.mode, []).append(ev.wall_s)
+        # single-device reference on the same model state: the plain
+        # PAC+ step jitted without the mesh (runs on one pool device)
+        batch = make_batch(s.cfg, B, S)
+        t_pac = timeit(
+            jax.jit(functools.partial(steps.pac_train_step, cfg=s.cfg, r=8)),
+            s.backbone, s.adapter, adamw_init(s.adapter), batch,
+        )
+    t_pipe = float(np.median(walls[f"hybrid dp{dp}xpp{stages}"][1:]))
+    t_cached_dp = float(np.median(walls["cached pure-dp"][1:]))
     for name, t in [("pac_1dev", t_pac), (f"pac_hybrid_dp{dp}xpp{stages}", t_pipe),
                     (f"pac_cached_dp{dp}", t_cached_dp)]:
         out.append(row(
@@ -248,9 +245,7 @@ if __name__ == "__main__":
     if a.kernels:
         main_kernels(a.arch or "t5-base-pac", out_json=a.out)
     elif a.dp * a.stages > 1:
-        from repro.compat import force_host_device_count
-
-        force_host_device_count(a.dp * a.stages)
+        # the session forces the fake device pool before backend init
         main_distributed(a.arch or "internlm2-1.8b", a.dp, a.stages, a.micro)
     else:
         main(a.arch or "t5-base-pac")

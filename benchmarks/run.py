@@ -39,11 +39,11 @@ def main() -> None:
     for name, module in BENCHES:
         if only and not any(name.startswith(o) for o in only):
             continue
-        t0 = time.time()
+        t0 = time.perf_counter()
         try:
             mod = __import__(module, fromlist=["main"])
             mod.main()
-            print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+            print(f"# {name} done in {time.perf_counter() - t0:.1f}s", file=sys.stderr)
         except Exception as e:
             failures.append((name, repr(e)))
             print(f"{name}_FAILED,0.0,{e!r}")

@@ -2,7 +2,10 @@
 hundred steps, activation cache on — the paper's personal-LLM scenario.
 
 Epoch 1 pays the backbone forward; epochs 2+ hit the cache and train the
-side network only (≈50× cheaper per step at r=8).
+side network only (≈50× cheaper per step at r=8). The run itself is a
+:class:`~repro.runtime.RunSpec` executed by an
+:class:`~repro.runtime.EdgeSession` (no more shelling into the trainer
+CLI) — the custom architecture just has to be registered first.
 
     PYTHONPATH=src python examples/finetune_100m_cached.py \
         [--steps 300] [--small]   # --small: ~10M for a fast demo
@@ -10,9 +13,9 @@ side network only (≈50× cheaper per step at r=8).
 
 import argparse
 import dataclasses
-import sys
 
 from repro.configs.base import ArchConfig, LayerSpec, register
+from repro.runtime import ConsoleHook, EdgeSession, RunSpec
 
 # a ~100M decoder (12L, d=768, ff=2048, vocab=16384)
 PAC_DEMO_100M = register(
@@ -47,18 +50,15 @@ def main():
         ))
     print(f"model: {cfg.name}, {cfg.param_count()/1e6:.1f}M params")
 
-    # steps 1..6 of the paper workflow live in the trainer CLI — reuse it
-    from repro.launch import train as trainer
-
+    # steps 1..6 of the paper workflow (quantize → pruning-init → plan →
+    # epoch-1 capture → cached epochs) are the session's lifecycle
     steps_per_epoch = 16
-    epochs = max(2, args.steps // steps_per_epoch)
-    sys.argv = [
-        "train", "--arch", cfg.name, "--epochs", str(epochs),
-        "--steps-per-epoch", str(steps_per_epoch),
-        "--batch", str(args.batch), "--seq", str(args.seq),
-        "--quant", "8", "--init", "pruning",
-    ]
-    trainer.main()
+    spec = RunSpec(
+        arch=cfg.name, epochs=max(2, args.steps // steps_per_epoch),
+        steps_per_epoch=steps_per_epoch, batch=args.batch, seq=args.seq,
+        quant=8, init="pruning",
+    )
+    EdgeSession(spec, log=print).run(hooks=(ConsoleHook(),))
 
 
 if __name__ == "__main__":

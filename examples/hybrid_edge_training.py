@@ -11,91 +11,53 @@ arranged as a 2×2 (dp, stage) mesh.
 * epoch ≥2 — the backbone never runs again: cached taps are re-batched
   (fresh shuffle each epoch) and the run drops to pure data parallelism.
 
+All of that wiring — forcing the fake device pool before the backend
+comes up, the mesh, the cache, both compiled steps — is the runtime
+layer's job now: this example is one :class:`~repro.runtime.RunSpec`
+and an :class:`~repro.runtime.EdgeSession`. The offline Alg. 1 plan for
+a *heterogeneous* pool is still printed first (pure planning, the same
+report the session logs for its homogeneous emulated pool).
+
 Run:  PYTHONPATH=src python examples/hybrid_edge_training.py
 """
 
-from repro.compat import force_host_device_count
+from repro.runtime import ConsoleHook, EdgeSession, RunSpec
 
 DP, STAGES, N_MICRO = 2, 2, 2
-force_host_device_count(DP * STAGES)  # before any JAX backend init
-
-import functools  # noqa: E402
-import time  # noqa: E402
-
-import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
-import numpy as np  # noqa: E402
-
-from repro.configs import get_arch  # noqa: E402
-from repro.core import steps  # noqa: E402
-from repro.core.activation_cache import ActivationCache  # noqa: E402
-from repro.core.init_methods import pruning_init  # noqa: E402
-from repro.core.planner import (  # noqa: E402
-    HybridParallelismPlanner,
-    JETSON_NANO_H,
-    JETSON_TX2_H,
-    model_layer_costs,
-)
-from repro.data import DataPipeline, SyntheticPersonalCorpus  # noqa: E402
-from repro.launch import sharding as shard  # noqa: E402
-from repro.launch.mesh import make_edge_mesh  # noqa: E402
-from repro.models import backbone as bb  # noqa: E402
-from repro.optim import adamw_init  # noqa: E402
 
 
 def main():
-    cfg = get_arch("internlm2-1.8b").reduced()
-    B, S, EPOCHS = 4, 32, 3
+    # the run, as data: a 2×2 (dp, stage) mesh, bf16 cache entries
+    # (half the bytes, taps within bf16 tolerance), 3 epochs of which
+    # the last two train straight from the cache
+    spec = RunSpec(
+        arch="internlm2-1.8b", reduced=True, epochs=3, steps_per_epoch=4,
+        batch=4, seq=32, r=8, lr=3e-3, init="pruning", seed=0,
+        dp=DP, stages=STAGES, micro=N_MICRO,
+        cache_compress="bf16", cache_budget_mb=1024,
+    )
 
-    # offline plan for the (heterogeneous) pool — Alg. 1
+    # offline plan for a *heterogeneous* pool (Alg. 1) — report only;
+    # the session below executes the CLI-pinned 2×2 mesh
+    from repro.core.planner import (
+        HybridParallelismPlanner,
+        JETSON_NANO_H,
+        JETSON_TX2_H,
+        model_layer_costs,
+    )
+
+    cfg = spec.arch_config()
     devices = [JETSON_TX2_H, JETSON_TX2_H, JETSON_NANO_H, JETSON_NANO_H]
     plan = HybridParallelismPlanner(
-        model_layer_costs(cfg, "pac", seq_len=S), devices, B, N_MICRO
+        model_layer_costs(cfg, "pac", seq_len=spec.seq), devices,
+        spec.batch, N_MICRO,
     ).plan(max_stages=STAGES)
     print(plan.describe())
 
-    mesh = make_edge_mesh(DP, STAGES)
-    print(f"executing on mesh {dict(mesh.shape)} with {plan.micro_batches} micro-batches")
-
-    bp = bb.init_backbone(jax.random.PRNGKey(0), cfg)
-    adapter = pruning_init(jax.random.PRNGKey(1), bp, cfg, r=8)
-    opt = adamw_init(adapter)
-
-    corpus = SyntheticPersonalCorpus(cfg.vocab, S + 1, 4 * B, seed=0)
-    pipe = DataPipeline(corpus, global_batch=B, shuffle=True, seed=0)
-    # bf16 entries: half the cache bytes, taps within bf16 tolerance
-    cache = ActivationCache(budget_bytes=1 << 30, compress="bf16")
-
-    step1 = jax.jit(functools.partial(
-        steps.pipeline_pac_train_step, cfg=cfg, mesh=mesh,
-        n_micro=plan.micro_batches, r=8, lr=3e-3))
-    stepN = None
-
-    for epoch in range(EPOCHS):
-        t0, losses = time.time(), []
-        for batch in pipe.epoch(epoch):  # fresh shuffle; cache keys per-seq
-            ids = batch.pop("seq_ids")
-            hit = cache.get_batch(ids, with_final=True)
-            if hit is None:  # epoch-1: hybrid DP×PP through the pipeline
-                loss, adapter, opt, (b0, taps, bf) = step1(bp, adapter, opt, batch)
-                cache.put_batch(ids, b0, taps, bf)
-            else:  # epoch≥2: pure DP from the cache
-                b0, taps, bf = hit
-                cached = {
-                    "b0": jnp.asarray(b0), "taps": jnp.asarray(taps),
-                    "b_final": jnp.asarray(bf),
-                    "labels": batch["labels"],
-                }
-                if stepN is None:
-                    stepN = jax.jit(
-                        functools.partial(steps.pac_cached_train_step, cfg=cfg, r=8, lr=3e-3),
-                        in_shardings=shard.cached_step_shardings(
-                            bp, adapter, opt, cached, mesh))
-                loss, adapter, opt = stepN(bp, adapter, opt, cached)
-            losses.append(float(loss))
-        mode = "hybrid dp×pp" if epoch == 0 else "cached pure-dp"
-        print(f"epoch {epoch}: loss={np.mean(losses):.4f} "
-              f"time={time.time()-t0:.1f}s ({mode})")
+    # the session owns the pool (fake host devices forced pre-backend),
+    # mesh, cache, and both step variants; ConsoleHook prints the
+    # classic per-epoch line (mode switches hybrid → cached pure-dp)
+    EdgeSession(spec, log=print).run(hooks=(ConsoleHook(),))
 
 
 if __name__ == "__main__":

@@ -4,20 +4,21 @@ not just printed, it is *run*, end to end, on emulated edge devices.
 
 The survey half is pure planning (Alg. 1 over the paper's Jetson
 profiles, full-size models). The execution half plans a CPU-runnable
-demo model at period granularity on the heterogeneous Env.B pool, turns
-the winning Plan into its :class:`StagePartition` (uneven layer
-boundaries and all), builds the mesh from it, and trains a few real
-steps through the 1F1B pipeline — then prints the modelled vs executed
-latency side by side.
+demo model at period granularity on the heterogeneous Env.B pool, saves
+the winning (RAGGED) Plan, and replays it through the runtime layer: a
+:class:`~repro.runtime.RunSpec` pointing at the plan file, executed by
+an :class:`~repro.runtime.EdgeSession` — which derives the
+:class:`StagePartition` (uneven layer boundaries and all), builds the
+mesh from it, and trains a few real steps through the 1F1B pipeline.
+Modelled vs executed latency are printed side by side.
 
     PYTHONPATH=src python examples/plan_edge_cluster.py [--quick] [--steps N]
 """
 
 import argparse
 import dataclasses
-import time
-
-from repro.compat import force_host_device_count
+import os
+import tempfile
 
 POOL_SIZE = 4  # fake host devices for the execution half
 
@@ -67,7 +68,7 @@ def build_demo_plan():
     """The 10-period demo model and its RAGGED Env.B plan (pure Python —
     safe before any JAX backend init). Also the workload
     ``benchmarks/bench_heterogeneous.py --executed`` measures."""
-    from repro.configs.base import ArchConfig, LayerSpec
+    from repro.configs.base import ArchConfig, LayerSpec, register
     from repro.core.planner import (
         HybridParallelismPlanner,
         JETSON_NANO_H,
@@ -77,11 +78,12 @@ def build_demo_plan():
         period_costs,
     )
 
-    cfg = ArchConfig(
+    # registered so a RunSpec can name it (the session replays the plan)
+    cfg = register(ArchConfig(
         name="plan-demo-10p", family="dense", n_layers=10, d_model=128,
         n_heads=4, n_kv_heads=4, d_ff=256, vocab=512,
         pattern=(LayerSpec(kind="attn"),), source="plan-execution demo",
-    )
+    ))
     # Env.B speed ratios with memory budgets scaled to the demo model
     # (~6.8 MB): no single device can host all 10 periods, so Alg. 1 must
     # pipeline — and the heterogeneous speeds make the split RAGGED
@@ -96,23 +98,16 @@ def build_demo_plan():
 
 
 def execute_winning_plan(n_steps: int = 3) -> dict:
-    """Plan the demo model on Env.B and execute the Plan for real.
+    """Plan the demo model on Env.B, save the Plan, and *replay* it
+    through the runtime layer (RunSpec → EdgeSession) for real.
 
     Returns {modelled_ms, executed_ms, compile_ms, stages, periods,
     ragged} so the heterogeneous benchmark can reuse this workload."""
-    import functools
-
-    import jax
-
     if n_steps < 1:
         raise ValueError(f"n_steps must be >= 1, got {n_steps}")
 
-    from repro.core import steps
-    from repro.core.parallel_adapters import init_adapter
     from repro.core.pipeline import simulate_plan
-    from repro.launch.mesh import make_plan_mesh
-    from repro.models import backbone as bb
-    from repro.optim import adamw_init
+    from repro.runtime import EdgeSession, EpochRunner, RunSpec, StepEvent
 
     cfg, plan = build_demo_plan()
     part = plan.stage_partition()
@@ -125,28 +120,28 @@ def execute_winning_plan(n_steps: int = 3) -> dict:
           f"periods/stage={part.periods_per_stage} "
           f"{'uniform' if part.is_uniform else 'RAGGED (padded+masked stages)'}")
 
-    mesh = make_plan_mesh(part)
-    dp = mesh.shape["dp"]
-    # execute the micro-batch size the plan was made for: mb == PLANNED_MB
-    B, S = PLANNED_MB * N_MICRO, 32
-    bp = bb.init_backbone(jax.random.PRNGKey(0), cfg)
-    adapter = init_adapter(jax.random.PRNGKey(1), cfg, r=8)
-    opt = adamw_init(adapter)
-    step = jax.jit(functools.partial(
-        steps.pipeline_pac_train_step, cfg=cfg, mesh=mesh, n_micro=N_MICRO,
-        r=8, partition=part))
-
-    times = []
-    for i in range(n_steps + 1):  # step 0 pays compilation
-        batch = {
-            "tokens": jax.random.randint(jax.random.PRNGKey(10 + i), (B, S), 0, cfg.vocab),
-            "labels": jax.random.randint(jax.random.PRNGKey(50 + i), (B, S), 0, cfg.vocab),
-        }
-        t0 = time.time()
-        loss, adapter, opt, _acts = step(bp, adapter, opt, batch)
-        jax.block_until_ready(loss)
-        times.append(time.time() - t0)
-        print(f"  step {i}: loss={float(loss):.4f} wall={times[-1]*1e3:.0f}ms")
+    # save → replay: the plan file is the contract the session executes
+    # (the same round-trip the trainer's --save-plan / --plan do)
+    fd, plan_path = tempfile.mkstemp(suffix=".json", prefix="env_b_plan_")
+    os.close(fd)
+    try:
+        plan.save(plan_path)
+        # execute the micro-batch size the plan was made for: mb == PLANNED_MB
+        spec = RunSpec(
+            arch=cfg.name, epochs=1, steps_per_epoch=n_steps + 1,
+            batch=PLANNED_MB * N_MICRO, seq=32, r=8, lr=1e-3, init="random",
+            plan=plan_path, pool=POOL_SIZE, micro=N_MICRO, use_cache=False,
+        )
+        times = []
+        with EdgeSession(spec) as session:  # forces the fake pool pre-backend
+            dp = session.exec_dp
+            for rec in EpochRunner(session).events():
+                if isinstance(rec, StepEvent):  # step 0 pays compilation
+                    times.append(rec.wall_s)
+                    print(f"  step {rec.index}: loss={rec.loss:.4f} "
+                          f"wall={rec.wall_s*1e3:.0f}ms")
+    finally:
+        os.unlink(plan_path)
     print(f"modelled (Jetson Env.B): {sim['minibatch_time']*1e3:.1f} ms/minibatch, "
           f"bubble {sim['bubble_fraction']:.1%}")
     print(f"executed (CPU-emulated {dp}x{part.n_stages} mesh): "
@@ -170,8 +165,8 @@ def main() -> None:
                     help="real train steps for the executed plan")
     args = ap.parse_args()
 
-    # before any JAX backend init: the execution half needs a real mesh
-    force_host_device_count(POOL_SIZE)
+    # the survey is pure planning; the session forces its own device
+    # pool before the backend comes up when the execution half runs
     if not args.quick:
         survey()
     execute_winning_plan(args.steps)

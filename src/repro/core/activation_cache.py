@@ -491,6 +491,27 @@ class ActivationCache:
             return path
 
 
+def manifest_for(cfg, *, reduced, seq_len, quant_bits, backbone,
+                 corpus_tokens) -> dict:
+    """The cache-manifest identity dict, shared by every persistent-cache
+    consumer (the trainer/session and the persistent-cache docs demo).
+
+    Any change to the backbone weights (seed, quantization), the corpus
+    contents, or the shapes changes a fingerprint here and invalidates
+    the cache on reopen — ``open_persistent`` compares this dict
+    verbatim against the stored manifest's ``meta``."""
+    from repro.checkpoint import tree_fingerprint
+
+    return {
+        "arch": cfg.name,
+        "reduced": bool(reduced),
+        "seq": int(seq_len),
+        "quant": int(quant_bits or 0),
+        "backbone": tree_fingerprint(backbone),
+        "corpus": tree_fingerprint(corpus_tokens),
+    }
+
+
 def _invalidate(cache_dir: str, reason: str) -> None:
     print(
         f"ACTIVATION CACHE INVALIDATED at {cache_dir}: {reason} — discarding "
@@ -585,6 +606,13 @@ class CachePrefetcher:
     step dequantizes in VMEM. While a prefetcher is draining, the owning
     thread must not mutate the cache except via ``put`` (both sides take
     the cache lock).
+
+    A prefetcher is a context manager: ``with CachePrefetcher(...) as
+    pf:`` guarantees deterministic shutdown on exit — including an
+    exception mid-epoch — via :meth:`close` (signal the worker to stop,
+    drain the queue so a blocked ``put`` unblocks, join the thread). A
+    leaked worker would otherwise keep device buffers alive through its
+    queued ``device_put`` results until process exit.
     """
 
     _DONE = object()
@@ -608,6 +636,8 @@ class CachePrefetcher:
         self._compressed = compressed
         self._q: queue.Queue = queue.Queue(maxsize=max(1, depth))
         self._err: Optional[BaseException] = None
+        self._stop = threading.Event()
+        self._done = False  # consumer saw the _DONE sentinel
         self._thread = threading.Thread(
             target=self._worker, name="activation-cache-prefetch", daemon=True
         )
@@ -616,6 +646,8 @@ class CachePrefetcher:
     def _worker(self) -> None:
         try:
             for keys in self._key_batches:
+                if self._stop.is_set():
+                    break
                 got = self._cache.get_batch(
                     keys, with_final=self._with_final, dtype=self._dtype,
                     compressed=self._compressed,
@@ -636,13 +668,32 @@ class CachePrefetcher:
     def __next__(self):
         item = self._q.get()
         if item is self._DONE:
+            self._done = True
             if self._err is not None:
                 raise self._err
             raise StopIteration
         return item
 
+    def __enter__(self) -> "CachePrefetcher":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
     def close(self) -> None:
-        """Drain and join (for early exit; normal exhaustion joins too)."""
-        while next(self, self._DONE) is not self._DONE:
-            pass
+        """Deterministic shutdown: signal the worker to stop, drain the
+        queue until its ``_DONE`` sentinel (unblocking a worker stuck on
+        a full queue), and join the thread. Idempotent; safe mid-epoch
+        (early exit / exception) and after normal exhaustion. Unlike
+        iteration, a worker error is swallowed here — close() is for
+        unwinding, not for results."""
+        self._stop.set()
+        while not self._done:
+            try:
+                item = self._q.get(timeout=60)
+            except queue.Empty:  # worker wedged — join below, best effort
+                break
+            if item is self._DONE:
+                self._done = True
         self._thread.join(timeout=30)

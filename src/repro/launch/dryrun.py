@@ -46,15 +46,15 @@ def run_case(arch: str, shape_name: str, *, multi_pod: bool, technique: str,
     import jax.numpy as jnp
 
     mesh = make_production_mesh(multi_pod=multi_pod)
-    t0 = time.time()
+    t0 = time.perf_counter()
     case = build_case(arch, shape_name, mesh, technique=technique,
                       quant_bits=quant_bits, kv_quant=kv_quant,
                       dtype={"f32": jnp.float32, "bf16": jnp.bfloat16}[dtype])
     with mesh:
         lowered = case.lower()
-        t_lower = time.time() - t0
+        t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.perf_counter() - t0 - t_lower
     n_adapter = 0
     if technique.startswith("pac"):
         from repro.core.parallel_adapters import adapter_param_count

@@ -4,6 +4,13 @@ Runs the paper's full workflow (Fig. 4): quantize → init adapters →
 plan → epoch-1 (backbone fwd + adapter update, cache capture) →
 epoch≥2 (cache hit, adapter-only). CPU-runnable with --reduced.
 
+The flags here are a thin veneer over :class:`repro.runtime.RunSpec` —
+``main()`` is exactly flags → RunSpec → ``EdgeSession.run()``. All run
+logic (device pool, plan resolution, mesh, cache wiring, the epoch
+loop and its step dispatch) lives in :mod:`repro.runtime`; use that API
+directly to embed a run programmatically (see docs/ARCHITECTURE.md,
+"The runtime layer").
+
 With ``--dp``/``--stages`` the trainer executes the planner's hybrid
 parallelism on a real 2-D ``(dp, stage)`` device mesh (paper Fig. 10/11):
 epoch-1 stages the frozen-backbone forward over the pipeline axis with
@@ -68,17 +75,14 @@ dense jnp oracle the Pallas path is tested against.
 from __future__ import annotations
 
 import argparse
-import functools
-import time
 
-import numpy as np
-
-from repro import compat
+from repro.runtime import ConsoleHook, EdgeSession, RunSpec, RunSpecError
 
 _EPILOG = """\
 Full flag reference with one runnable example per flag: docs/CLI.md.
 Module→paper map and the data-flow of an epoch-1 vs cached epoch:
-docs/ARCHITECTURE.md.
+docs/ARCHITECTURE.md. Programmatic API (RunSpec → EdgeSession →
+EpochRunner): the "runtime layer" section of docs/ARCHITECTURE.md.
 """
 
 
@@ -133,298 +137,11 @@ def main() -> None:
                          "on-device instead of on the host")
     args = ap.parse_args()
 
-    plan_mode = args.plan is not None
-    total = args.dp * args.stages
-    pool = args.pool or max(total, 4)
-    saved_plan = None
-    if plan_mode and args.plan != "auto":
-        # a saved plan knows its stage count, and Plan.load is pure JSON
-        # (no JAX state) — load it now so the replay pool is sized before
-        # the device-count knob locks
-        from repro.core.planner import Plan as _Plan
-
-        saved_plan = _Plan.load(args.plan)
-        if args.pool is not None and args.pool < saved_plan.n_stages:
-            raise SystemExit(
-                f"--pool {args.pool} is smaller than the saved plan's "
-                f"{saved_plan.n_stages} stages; pass --pool >= "
-                f"{saved_plan.n_stages} or replan with --plan auto")
-        pool = max(pool, saved_plan.n_stages)
-    if plan_mode:
-        # the plan decides dp×stages later, but the fake-device count must
-        # precede the first backend initialisation — force the whole pool
-        # (the mesh uses its first dp·stages devices)
-        compat.force_host_device_count(pool)
-    elif total > 1:
-        # must precede the first JAX backend initialisation: on CPU this
-        # fakes dp·stages host devices so the SPMD mesh is real
-        compat.force_host_device_count(total)
-
-    import jax  # noqa: E402 — after the device-count knob
-    import jax.numpy as jnp
-
-    from repro.checkpoint import save_checkpoint, tree_fingerprint
-    from repro.configs import get_arch
-    from repro.core import steps
-    from repro.core.activation_cache import (
-        ActivationCache,
-        CachePrefetcher,
-        open_persistent,
-    )
-    from repro.core.init_methods import pruning_init
-    from repro.core.parallel_adapters import init_adapter
-    from repro.core.planner import HybridParallelismPlanner, JETSON_NANO_H
-    from repro.core.quantization import quantize_tree, tree_storage_bytes
-    from repro.data import DataPipeline, SyntheticPersonalCorpus
-    from repro.launch import sharding as shard
-    from repro.launch.costs import resolve_cost_model
-    from repro.launch.mesh import make_edge_mesh, make_plan_mesh
-    from repro.models import backbone as bb
-    from repro.optim import adamw_init
-
-    cfg = get_arch(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    print(f"arch={cfg.name} params≈{cfg.param_count()/1e6:.1f}M "
-          f"active≈{cfg.active_param_count()/1e6:.1f}M")
-
-    def _build_plan(planner_mb, n_micro, max_stages):
-        # one construction site for both the executed plan and the report:
-        # period-granular costs (analytic or HLO-calibrated) through Alg. 1
-        cost_model = resolve_cost_model(
-            args.calibrate, micro_batch=max(1, args.batch // n_micro),
-            quant_bits=args.quant)
-        return HybridParallelismPlanner(
-            cost_model.period_costs(cfg, "pac", seq_len=args.seq),
-            [JETSON_NANO_H] * pool, planner_mb, n_micro,
-        ).plan(max_stages=max_stages)
-
-    partition = None
-    exec_dp, exec_stages = args.dp, args.stages
-    if plan_mode:
-        # ---- plan-driven execution: the Plan is the runtime contract ----
-        n_micro = args.micro or (saved_plan.micro_batches if saved_plan else None)
-        if n_micro is not None and args.batch % n_micro:
-            raise SystemExit(
-                f"--batch {args.batch} must be divisible by the plan's "
-                f"{n_micro} micro-batches (override with --micro)")
-        if args.plan == "auto":
-            smax = min(pool, cfg.n_periods)
-            if n_micro is None:
-                # the plan selects the micro count too: σ-optimal latency
-                # over the batch's divisors
-                cands = [m for m in range(1, args.batch + 1) if args.batch % m == 0]
-                n_micro, plan = min(
-                    ((m, _build_plan(args.batch // m, m, smax)) for m in cands),
-                    key=lambda t: t[1].minibatch_latency)
-            else:
-                plan = _build_plan(args.batch // n_micro, n_micro, smax)
-        else:
-            if args.calibrate:
-                print("note: --calibrate has no effect when replaying a "
-                      "saved plan; re-run with --plan auto to replan")
-            plan = saved_plan
-        mb = args.batch // n_micro
-        partition = plan.stage_partition()
-        if partition.n_periods != cfg.n_periods:
-            raise SystemExit(
-                f"plan partitions {partition.n_periods} periods but "
-                f"{cfg.name} has {cfg.n_periods} — replan for this arch")
-        exec_stages = partition.n_stages
-        # widest replica count the pool and the batch layout support
-        exec_dp = max(1, pool // exec_stages)
-        while exec_dp > 1 and (args.batch // n_micro) % exec_dp:
-            exec_dp -= 1
-        print("plan:", plan.describe())
-        for s, split in enumerate(partition.samples_per_device):
-            if sum(split) != mb:
-                print(f"note: stage {s} was planned for {sum(split)} samples "
-                      f"per micro-batch, executing {mb}")
-        total = exec_dp * exec_stages
-    distributed = total > 1
-    # default micro count: the plan's when plan-driven, the mesh's stage
-    # count when distributed; the pre-existing 4-micro planning report otherwise
-    if not plan_mode:
-        n_micro = args.micro if args.micro is not None else (
-            args.stages if distributed else 4)
-    if distributed:
-        if partition is None and cfg.n_periods % exec_stages:
-            raise SystemExit(
-                f"--stages {exec_stages} must divide n_periods={cfg.n_periods}")
-        # fail fast on an impossible batch layout, before any compute
-        DataPipeline.dp_microbatches(
-            {"tokens": np.zeros((args.batch, args.seq), np.int32)}, n_micro, exec_dp)
-
-    bp = bb.init_backbone(jax.random.PRNGKey(args.seed), cfg)
-    if args.quant:
-        bq = quantize_tree(bp, bits=args.quant)
-        print(f"backbone quantized INT{args.quant}: "
-              f"{tree_storage_bytes(bp)/2**20:.1f} MB → {tree_storage_bytes(bq)/2**20:.1f} MB")
-    else:
-        bq = bp
-    if args.init == "pruning":
-        adapter = pruning_init(jax.random.PRNGKey(args.seed + 1), bp, cfg, r=args.r)
-    else:
-        adapter = init_adapter(jax.random.PRNGKey(args.seed + 1), cfg, r=args.r)
-    n_train = sum(x.size for x in jax.tree.leaves(adapter))
-    print(f"trainable (adapter) params: {n_train/1e6:.2f}M "
-          f"({n_train/cfg.param_count():.2%} of backbone)")
-    opt = adamw_init(adapter)
-
-    if not plan_mode:
-        # offline planning report (paper Step 3-4): the plan is computed
-        # for the executed micro-batch count at period granularity; the
-        # stage count is CLI-pinned to the mesh shape and the planner's
-        # σ-optimum is reported against it. (--plan makes this plan the
-        # execution contract instead of a report.)
-        plan = _build_plan(args.batch, n_micro,
-                           args.stages if distributed else None)
-        print("edge-pool plan:", plan.describe().splitlines()[0])
-        if distributed and plan.n_stages != args.stages:
-            print(f"note: planner's σ-optimal stage count is {plan.n_stages}; "
-                  f"executing --stages {args.stages} (pass --plan auto to "
-                  f"execute the σ-optimum)")
-    if args.save_plan:
-        print(f"plan saved: {plan.save(args.save_plan)}")
-
-    mesh = None
-    if distributed:
-        if plan_mode:
-            mesh = make_plan_mesh(partition, dp=exec_dp)
-            ragged = "" if partition.is_uniform else (
-                f", ragged periods {partition.periods_per_stage}")
-            print(f"mesh: plan-driven dp={exec_dp}×pp={exec_stages} on "
-                  f"{total} devices, {n_micro} micro-batches{ragged}")
-        else:
-            mesh = make_edge_mesh(exec_dp, exec_stages)
-            print(f"mesh: hybrid dp={exec_dp}×pp={exec_stages} on "
-                  f"{total} devices, {n_micro} micro-batches")
-
-    n_seq = args.steps_per_epoch * args.batch
-    corpus = SyntheticPersonalCorpus(cfg.vocab, args.seq + 1, n_seq, seed=args.seed)
-    pipe = DataPipeline(corpus, global_batch=args.batch, shuffle=True, seed=args.seed)
-
-    # activation cache v2: compressed entries (b0 + taps + b_final folded
-    # into one budgeted entry), optionally persistent across runs
-    cache_budget = args.cache_budget_mb << 20
-    meta = None
-    if args.cache_dir and not args.no_cache:
-        # the manifest identity: any change to the backbone weights (seed,
-        # quantization), the corpus, or the shapes invalidates the cache
-        meta = {
-            "arch": cfg.name,
-            "reduced": bool(args.reduced),
-            "seq": args.seq,
-            "quant": args.quant or 0,
-            "backbone": tree_fingerprint(bq),
-            "corpus": tree_fingerprint(corpus.tokens),
-        }
-        cache, warm = open_persistent(
-            args.cache_dir, meta, budget_bytes=cache_budget,
-            compress=args.cache_compress)
-        if warm:
-            print(f"activation cache: warm manifest at {args.cache_dir} "
-                  f"({len(cache)} seqs, {args.cache_compress}) — cached epochs "
-                  f"skip the backbone forward entirely")
-    else:
-        cache = ActivationCache(budget_bytes=cache_budget,
-                                compress=args.cache_compress)
-
-    # compressed handoff: with the Pallas kernels the cache skips host-side
-    # decompression — int8 entries ship as {"q", "scale"} payloads and are
-    # dequantised in VMEM inside the fused cached step
-    use_pallas = args.kernels == "pallas"
-    step1 = jax.jit(functools.partial(steps.pac_train_step, cfg=cfg, r=args.r, lr=args.lr))
-    # donate (adapter, opt) — the cached step returns them updated, so the
-    # old buffers can be reused in place every step of a cached epoch
-    stepN = jax.jit(
-        functools.partial(steps.pac_cached_train_step, cfg=cfg, r=args.r,
-                          lr=args.lr, kernel_impl=args.kernels),
-        donate_argnums=(1, 2))
-    if distributed:
-        # epoch-1: staged backbone forward over `stage` + dp AllReduce
-        step1 = jax.jit(functools.partial(
-            steps.pipeline_pac_train_step, cfg=cfg, mesh=mesh, n_micro=n_micro,
-            r=args.r, lr=args.lr, partition=partition))
-        stepN = None  # built on first cached batch (needs its tree structure)
-
-    for epoch in range(args.epochs):
-        t0 = time.time()
-        losses = []
-        used_cache = False
-        prefetch = None
-        if not args.no_cache:
-            order = pipe.epoch_order(epoch)
-            if order and cache.covers(np.concatenate(order), with_final=True):
-                # the whole epoch is resident: a background thread
-                # decompresses/loads batch k+1 (and starts its
-                # host→device copy) while step k runs
-                prefetch = CachePrefetcher(
-                    cache, order, to_device=not distributed, dtype=None,
-                    compressed=use_pallas)
-        for batch in pipe.epoch(epoch):
-            ids = batch.pop("seq_ids")
-            if prefetch is not None:
-                hit = next(prefetch)
-            elif args.no_cache:
-                hit = None
-            else:
-                hit = cache.get_batch(ids, with_final=True, dtype=None,
-                                      compressed=use_pallas)
-            if hit is None:
-                loss, adapter, opt, (b0, taps, bf) = step1(bq, adapter, opt, batch)
-                if not args.no_cache:
-                    cache.put_batch(ids, b0, taps, bf)
-            else:
-                used_cache = True
-                b0, taps, bf = (jax.tree.map(jnp.asarray, h) for h in hit)
-                cached = {
-                    "b0": b0,
-                    "taps": taps,
-                    "b_final": bf,
-                    "labels": batch["labels"],
-                }
-                if stepN is None:  # epoch≥2 distributed: *pure* DP over the mesh
-                    if use_pallas:
-                        # GSPMD cannot repartition pallas_call — the DP
-                        # twin shard_maps the fused step over the pool
-                        stepN = jax.jit(
-                            functools.partial(
-                                steps.dp_cached_train_step, cfg=cfg,
-                                mesh=mesh, r=args.r, lr=args.lr,
-                                kernel_impl="pallas",
-                                batch_axes=shard.cached_batch_axes(
-                                    cached, mesh)),
-                            donate_argnums=(1, 2))
-                    else:
-                        stepN = jax.jit(
-                            functools.partial(steps.pac_cached_train_step,
-                                              cfg=cfg, r=args.r, lr=args.lr),
-                            in_shardings=shard.cached_step_shardings(
-                                bq, adapter, opt, cached, mesh),
-                            donate_argnums=(1, 2))
-                loss, adapter, opt = stepN(bq, adapter, opt, cached)
-            losses.append(float(loss))
-        dt = time.time() - t0
-        if used_cache:
-            mode = "cached pure-dp" if distributed else "cached"
-        elif distributed:
-            kind = "plan-driven" if plan_mode else "hybrid"
-            mode = f"{kind} dp{exec_dp}xpp{exec_stages}"
-        else:
-            mode = "full"
-        print(f"epoch {epoch}: loss={np.mean(losses):.4f} time={dt:.1f}s ({mode}) "
-              f"cache[{len(cache)} seqs, {cache.nbytes/2**20:.0f} MB, "
-              f"{args.cache_compress}]")
-
-    if args.ckpt:
-        n = save_checkpoint(args.ckpt, {"adapter": adapter, "config": cfg.name})
-        print(f"checkpoint: {args.ckpt} ({n/2**20:.1f} MB)")
-    if meta is not None:
-        path = cache.save_manifest(meta)
-        print(f"cache manifest: {path} ({len(cache)} seqs, {args.cache_compress})")
-    else:
-        cache.clear()
+    try:
+        spec = RunSpec.from_args(args)
+        EdgeSession(spec, log=print).run(hooks=(ConsoleHook(),))
+    except RunSpecError as e:
+        raise SystemExit(str(e))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,34 @@
+"""repro.runtime — the session layer: one engine owning pool, plan,
+cache, and train steps.
+
+* :class:`~repro.runtime.spec.RunSpec` — a typed, JSON-round-trippable
+  description of one run (the trainer flags are a veneer over it).
+* :class:`~repro.runtime.session.EdgeSession` — the run engine: device
+  pool, Plan resolution, mesh, activation cache (+ prefetch), and the
+  four compiled step variants behind one ``step(batch)`` dispatch.
+* :class:`~repro.runtime.runner.EpochRunner` — the epoch loop as a
+  generator of :class:`~repro.runtime.session.StepEvent` /
+  :class:`~repro.runtime.runner.EpochReport` records, with observability
+  attached as :class:`~repro.runtime.runner.RunHooks` callbacks
+  (:class:`~repro.runtime.runner.ConsoleHook` reproduces the CLI line).
+
+Importing this package touches no JAX device state: a session forces
+the host device count (CPU pool emulation) inside ``open()``, before
+its first backend-touching import — so build specs and sessions freely
+at module scope, but open them before any other JAX backend use.
+"""
+
+from repro.runtime.runner import ConsoleHook, EpochReport, EpochRunner, RunHooks
+from repro.runtime.session import EdgeSession, StepEvent
+from repro.runtime.spec import RunSpec, RunSpecError
+
+__all__ = [
+    "ConsoleHook",
+    "EdgeSession",
+    "EpochReport",
+    "EpochRunner",
+    "RunHooks",
+    "RunSpec",
+    "RunSpecError",
+    "StepEvent",
+]

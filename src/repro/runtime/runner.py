@@ -1,0 +1,132 @@
+"""EpochRunner — structured epoch loop over an EdgeSession.
+
+The trainer's epoch loop as a generator of typed records instead of a
+wall of prints: each epoch yields its :class:`StepEvent`s (loss, step
+time, cache hit, mode) and closes with an :class:`EpochReport`.
+Observability — and the future fleet scheduler — attach through the
+:class:`RunHooks` interface as callbacks; :class:`ConsoleHook` is the
+hook that reproduces the trainer CLI's classic ``epoch N: loss=...``
+line byte-for-byte.
+
+    runner = EpochRunner(session, hooks=[ConsoleHook()])
+    reports = runner.run()                   # all spec.epochs
+    # or stream:
+    for rec in runner.events():              # StepEvent | EpochReport
+        ...
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Iterator, List, Union
+
+from repro.runtime.session import EdgeSession, StepEvent
+
+
+@dataclass
+class EpochReport:
+    """One epoch's outcome (the CLI's per-epoch summary line, as data)."""
+
+    epoch: int
+    losses: List[float] = field(default_factory=list)
+    time_s: float = 0.0
+    used_cache: bool = False
+    mode: str = "full"
+    steps: int = 0
+
+    @property
+    def mean_loss(self) -> float:
+        return float(sum(self.losses) / max(1, len(self.losses)))
+
+
+class RunHooks:
+    """Observer interface for a run — subclass and override what you
+    need (all methods are no-ops). Hooks receive the live session, so a
+    scheduler hook can inspect the cache, mesh, or adapter state."""
+
+    def on_epoch_start(self, session: EdgeSession, epoch: int) -> None:
+        pass
+
+    def on_step(self, session: EdgeSession, event: StepEvent) -> None:
+        pass
+
+    def on_epoch_end(self, session: EdgeSession, report: EpochReport) -> None:
+        pass
+
+
+class ConsoleHook(RunHooks):
+    """The trainer CLI's per-epoch summary line, unchanged:
+
+    ``epoch 0: loss=4.1234 time=1.2s (full) cache[8 seqs, 3 MB, f32]``
+    """
+
+    def __init__(self, print_fn=print):
+        self._print = print_fn
+
+    def on_epoch_end(self, session: EdgeSession, report: EpochReport) -> None:
+        cache = session.cache
+        self._print(
+            f"epoch {report.epoch}: loss={report.mean_loss:.4f} "
+            f"time={report.time_s:.1f}s ({report.mode}) "
+            f"cache[{len(cache)} seqs, {cache.nbytes/2**20:.0f} MB, "
+            f"{session.spec.cache_compress}]")
+
+
+class EpochRunner:
+    """Drives ``spec.epochs`` epochs of an opened :class:`EdgeSession`.
+
+    The epoch's prefetcher lifecycle is bracketed by
+    ``session.epoch_scope`` (the prefetcher is a context manager), so an
+    exception mid-epoch can't leak the prefetch worker thread.
+    """
+
+    def __init__(self, session: EdgeSession, hooks=()):
+        self.session = session
+        self.hooks = list(hooks)
+
+    # -- streaming ----------------------------------------------------------
+
+    def run_epoch(self, epoch: int) -> Iterator[Union[StepEvent, EpochReport]]:
+        """Yield every :class:`StepEvent` of ``epoch``, then its
+        :class:`EpochReport` (always the final record)."""
+        s = self.session
+        for h in self.hooks:
+            h.on_epoch_start(s, epoch)
+        report = EpochReport(epoch=epoch)
+        t0 = time.perf_counter()
+        # epoch_scope arms the prefetcher (when the epoch is fully
+        # cache-resident) as a context manager: an exception mid-epoch
+        # joins the worker thread instead of leaking it
+        with s.epoch_scope(epoch):
+            for i, batch in enumerate(s.pipe.epoch(epoch)):
+                event = s.step(batch, epoch=epoch, index=i)
+                report.losses.append(event.loss)
+                report.used_cache = report.used_cache or event.cache_hit
+                report.steps += 1
+                for h in self.hooks:
+                    h.on_step(s, event)
+                yield event
+        report.time_s = time.perf_counter() - t0
+        report.mode = s.mode(report.used_cache)
+        for h in self.hooks:
+            h.on_epoch_end(s, report)
+        yield report
+
+    def events(self) -> Iterator[Union[StepEvent, EpochReport]]:
+        """All epochs, streamed: StepEvents interleaved with one
+        EpochReport per epoch."""
+        for epoch in range(self.session.spec.epochs):
+            yield from self.run_epoch(epoch)
+
+    # -- collecting ---------------------------------------------------------
+
+    def epochs(self) -> Iterator[EpochReport]:
+        """One EpochReport per epoch (StepEvents consumed internally —
+        hooks still fire per step)."""
+        for rec in self.events():
+            if isinstance(rec, EpochReport):
+                yield rec
+
+    def run(self) -> List[EpochReport]:
+        return list(self.epochs())

@@ -13,6 +13,7 @@ from repro.core.activation_cache import (
     CachePrefetcher,
     MANIFEST_NAME,
     cache_bytes_per_sequence,
+    manifest_for,
     open_persistent,
     policy_bytes_per_value,
 )
@@ -404,6 +405,62 @@ def test_prefetcher_yields_none_on_missing_key():
     got = list(CachePrefetcher(cache, order, to_device=False))
     assert got[1] is None
     assert got[0] is not None and got[2] is not None
+
+
+def test_prefetcher_context_manager_joins_worker_on_early_exit():
+    """Abandoning an epoch mid-stream (exception, early break) must not
+    leak the worker: `with` closes the prefetcher — stop flag, queue
+    drain (so a blocked put() unblocks), thread join."""
+    cache = _filled_cache(8)
+    order = [np.array([k]) for k in range(8)]
+    with pytest.raises(RuntimeError):
+        with CachePrefetcher(cache, order, to_device=False, depth=1) as pf:
+            assert next(pf) is not None  # consume one of eight
+            raise RuntimeError("train step blew up")
+    assert not pf._thread.is_alive()
+    assert pf._q.qsize() == 0
+
+
+def test_prefetcher_close_is_idempotent_and_safe_after_drain():
+    cache = _filled_cache(4)
+    order = [np.array([k]) for k in range(4)]
+    with CachePrefetcher(cache, order, to_device=False) as pf:
+        assert len(list(pf)) == 4  # fully drained: sentinel consumed
+    assert not pf._thread.is_alive()
+    pf.close()  # second close is a no-op
+    # plain (non-`with`) use still works and can be closed manually
+    pf2 = CachePrefetcher(cache, order, to_device=False)
+    assert len(list(pf2)) == 4
+    pf2.close()
+
+
+# ---------------------------------------------------------------------------
+# v2: the shared manifest identity
+# ---------------------------------------------------------------------------
+
+
+def test_manifest_for_fingerprints_backbone_and_corpus():
+    """manifest_for is THE cache identity: same inputs → same dict;
+    any backbone/corpus/shape change → different dict (invalidation)."""
+    import types
+
+    cfg = types.SimpleNamespace(name="demo-arch")
+    backbone = {"w": np.arange(12, dtype=np.float32).reshape(3, 4)}
+    corpus = np.arange(64, dtype=np.int32)
+    m = manifest_for(cfg, reduced=True, seq_len=16, quant_bits=None,
+                     backbone=backbone, corpus_tokens=corpus)
+    assert m == manifest_for(cfg, reduced=True, seq_len=16, quant_bits=None,
+                             backbone=backbone, corpus_tokens=corpus)
+    assert set(m) == {"arch", "reduced", "seq", "quant", "backbone", "corpus"}
+    assert m["arch"] == "demo-arch" and m["quant"] == 0 and m["seq"] == 16
+    m8 = manifest_for(cfg, reduced=True, seq_len=16, quant_bits=8,
+                      backbone=backbone, corpus_tokens=corpus)
+    assert m8["quant"] == 8
+    other_bb = {"w": backbone["w"] + 1}
+    assert manifest_for(cfg, reduced=True, seq_len=16, quant_bits=None,
+                        backbone=other_bb, corpus_tokens=corpus) != m
+    assert manifest_for(cfg, reduced=True, seq_len=16, quant_bits=None,
+                        backbone=backbone, corpus_tokens=corpus + 1) != m
 
 
 # ---------------------------------------------------------------------------
