@@ -16,6 +16,16 @@ compression policy, and writes ``BENCH_cached_step.json`` so the perf
 trajectory has datapoints. Off-TPU the Pallas numbers are *interpreter
 mode* — a correctness/traffic datapoint, not a speed claim; rerun on TPU
 hardware for the real comparison.
+
+``--epoch1-kernels`` does the same for the *epoch-1* step, now that the
+OpSet dispatch (``repro.core.opset``) routes the frozen forward through
+the quantized kernels: ref vs pallas stage timing (frozen forward with
+tap emission, then the full PAC+ train step) on an INT8 backbone, plus a
+(bm, bn, bk) block-size autotune sweep of ``quant_matmul`` on a
+representative projection shape. Writes ``BENCH_epoch1_step.json``; the
+``pallas_interpret_mode`` flag in the JSON says whether the Pallas
+columns ran the interpreter (CPU CI) or the real TPU backend — never
+read interpret-mode ratios as speed claims.
 """
 
 import functools
@@ -185,6 +195,103 @@ def main_kernels(arch="t5-base-pac", B=8, S=64, out_json="BENCH_cached_step.json
     return out
 
 
+def main_epoch1_kernels(arch="t5-base-pac", B=8, S=64,
+                        out_json="BENCH_epoch1_step.json") -> list:
+    """Epoch-1 step: ref vs pallas OpSet on an INT8 backbone, plus a
+    quant_matmul block-size autotune sweep.
+
+    Stage timing per impl: the frozen forward alone (embed + blocks +
+    tap emission — what the OpSet dispatch governs) and the full PAC+
+    train step (forward + adapter grads + update). The pallas leg emits
+    int8 storage-form taps at the tap site; the ref leg is the dense
+    oracle with f32 taps. The autotune sweep times ``quant_matmul`` over
+    the (bm, bn, bk) grid on one representative projection tile and
+    records the fastest block config. ``pallas_interpret_mode`` in the
+    JSON marks interpreter-mode (off-TPU) numbers — correctness-priced,
+    not speed-priced.
+    """
+    from repro.core.opset import get_opset
+    from repro.core.quantization import quantize, quantize_tree
+    from repro.kernels.cached_step import _auto_interpret
+    from repro.kernels.quant_matmul import quant_matmul
+
+    cfg = get_arch(arch).reduced()
+    bp = quantize_tree(bb.init_backbone(jax.random.PRNGKey(0), cfg),
+                       bits=8, min_size=1024)
+    ap = init_adapter(jax.random.PRNGKey(3), cfg, r=8)
+    opt = adamw_init(ap)
+    batch = make_batch(cfg, B, S)
+    interp = _auto_interpret(None)
+    out, stages_r = [], {}
+
+    for impl in ("ref", "pallas"):
+        tap = "int8" if impl == "pallas" else "f32"
+
+        def fwd(p, b, impl=impl, tap=tap):
+            ops = get_opset(impl, tap)
+            return bb.backbone_forward(p, cfg, b, collect_taps=True, ops=ops)
+
+        t_fwd = timeit(jax.jit(fwd), bp, batch)
+        step = jax.jit(functools.partial(
+            steps.pac_train_step, cfg=cfg, r=8, kernel_impl=impl,
+            tap_policy=tap))
+        t_step = timeit(step, bp, ap, opt, batch)
+        loss = float(step(bp, ap, opt, batch)[0])
+        stages_r[impl] = {
+            "frozen_forward_ms": round(t_fwd * 1e3, 3),
+            "train_step_ms": round(t_step * 1e3, 3),
+            "loss": loss,
+            "tap_form": "int8 q+scale (storage form)" if tap == "int8" else "f32",
+        }
+        out.append(row(
+            f"epoch1_kernels_{impl}", t_step * 1e6 / B,
+            f"fwd_ms={t_fwd*1e3:.2f};step_ms={t_step*1e3:.2f};loss={loss:.4f}",
+        ))
+
+    # -- quant_matmul block-size autotune on one projection tile ----------
+    # Padded shapes (the OpSet's pad rules make every real projection land
+    # on these multiples): M = B*S tokens, K = d_model, N = one 128-block
+    # fan-out. Kept small so interpreter mode stays tractable.
+    M, K, N = 256, 256, 512
+    x = jax.random.normal(jax.random.PRNGKey(7), (M, K))
+    wq = quantize(jax.random.normal(jax.random.PRNGKey(8), (K, N)),
+                  bits=8, block=128)
+    sweep = []
+    for bm in (64, 128, 256):
+        for bn in (128, 256):
+            for bk in (128, 256):
+                if M % bm or N % bn or K % bk:
+                    continue
+                f = functools.partial(
+                    quant_matmul, bits=8, bm=bm, bn=bn, bk=bk, interpret=interp)
+                t = timeit(f, x, wq.q, wq.scale)
+                sweep.append({"bm": bm, "bn": bn, "bk": bk,
+                              "ms": round(t * 1e3, 3)})
+    best = min(sweep, key=lambda s: s["ms"])
+    out.append(row(
+        "epoch1_autotune_quant_matmul", best["ms"] * 1e3,
+        f"best=bm{best['bm']}xbn{best['bn']}xbk{best['bk']};"
+        f"shape={M}x{K}x{N};configs={len(sweep)}",
+    ))
+
+    payload = {
+        "arch": cfg.name, "batch": B, "seq": S,
+        "backend": jax.default_backend(),
+        "pallas_interpret_mode": interp,
+        "epoch1": stages_r,
+        "ratio_pallas_over_ref": round(
+            stages_r["pallas"]["train_step_ms"] / stages_r["ref"]["train_step_ms"], 3),
+        "loss_abs_diff": abs(stages_r["pallas"]["loss"] - stages_r["ref"]["loss"]),
+        "autotune_quant_matmul": {
+            "shape_mkn": [M, K, N], "bits": 8, "sweep": sweep, "best": best,
+        },
+    }
+    with open(out_json, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    print(f"wrote {out_json}")
+    return out
+
+
 def main_distributed(arch="internlm2-1.8b", dp=2, stages=2, n_micro=None, B=8, S=64) -> list:
     """Hybrid DP×PP step time vs single device, measured through the
     runtime layer: one :class:`~repro.runtime.EdgeSession` owns the pool
@@ -239,11 +346,19 @@ if __name__ == "__main__":
     p.add_argument("--kernels", action="store_true",
                    help="benchmark the ref-vs-pallas cached step per cache "
                         "policy and write BENCH_cached_step.json")
-    p.add_argument("--out", default="BENCH_cached_step.json",
-                   help="JSON output path for --kernels")
+    p.add_argument("--epoch1-kernels", action="store_true",
+                   help="benchmark the ref-vs-pallas epoch-1 step (OpSet "
+                        "dispatch, int8 backbone) + quant_matmul block "
+                        "autotune and write BENCH_epoch1_step.json")
+    p.add_argument("--out", default=None,
+                   help="JSON output path for --kernels / --epoch1-kernels")
     a = p.parse_args()
-    if a.kernels:
-        main_kernels(a.arch or "t5-base-pac", out_json=a.out)
+    if a.epoch1_kernels:
+        main_epoch1_kernels(a.arch or "t5-base-pac",
+                            out_json=a.out or "BENCH_epoch1_step.json")
+    elif a.kernels:
+        main_kernels(a.arch or "t5-base-pac",
+                     out_json=a.out or "BENCH_cached_step.json")
     elif a.dp * a.stages > 1:
         # the session forces the fake device pool before backend init
         main_distributed(a.arch or "internlm2-1.8b", a.dp, a.stages, a.micro)

@@ -1,43 +1,38 @@
-"""Quickstart: fine-tune any assigned architecture with PAC+ in ~30 lines.
+"""Quickstart: fine-tune any assigned architecture with PAC+ in a few lines.
 
-    PYTHONPATH=src python examples/quickstart.py [arch]
+The run is a :class:`~repro.runtime.RunSpec` executed by an
+:class:`~repro.runtime.EdgeSession` — the same engine behind the trainer
+CLI (quantize → init adapters → epoch-1 capture → cached epochs).
+
+    PYTHONPATH=src python examples/quickstart.py [--arch gemma2-2b]
 """
 
-import functools
-import sys
+import argparse
 
-import jax
-
-from repro.configs import get_arch, list_archs
-from repro.core import steps
-from repro.core.parallel_adapters import init_adapter
-from repro.models import backbone as bb
-from repro.optim import adamw_init
+from repro.configs import list_archs
+from repro.runtime import ConsoleHook, EdgeSession, RunSpec
 
 
-def main(arch: str = "gemma2-2b") -> None:
-    print(f"available architectures: {list_archs()}")
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="gemma2-2b",
+                    help=f"one of: {', '.join(list_archs())}")
+    ap.add_argument("--epochs", type=int, default=3)
+    ap.add_argument("--steps-per-epoch", type=int, default=4)
+    ap.add_argument("--kernels", default="ref", choices=["ref", "pallas"],
+                    help="OpSet for the frozen path (pallas = quantized "
+                         "kernels; interpret mode off-TPU)")
+    args = ap.parse_args()
 
-    cfg = get_arch(arch).reduced()  # CPU-scale variant of the same family
-    backbone = bb.init_backbone(jax.random.PRNGKey(0), cfg)  # frozen
-    adapter = init_adapter(jax.random.PRNGKey(1), cfg, r=8)  # trainable side net
-    opt = adamw_init(adapter)
-
-    B, S = 4, 32
-    batch = {
-        "tokens": jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab),
-        "labels": jax.random.randint(jax.random.PRNGKey(3), (B, S), 0, cfg.vocab),
-    }
-    if cfg.frontend:  # audio/vlm: the stub frontend supplies embeddings
-        batch["embeds"] = jax.random.normal(jax.random.PRNGKey(4), (B, S, cfg.d_model)) * 0.3
-        del batch["tokens"]
-
-    step = jax.jit(functools.partial(steps.pac_train_step, cfg=cfg, r=8))
-    for i in range(10):
-        loss, adapter, opt, _cache = step(backbone, adapter, opt, batch)
-        print(f"step {i}: loss={float(loss):.4f}")
+    spec = RunSpec(
+        arch=args.arch, reduced=True,  # CPU-scale variant of the same family
+        epochs=args.epochs, steps_per_epoch=args.steps_per_epoch,
+        batch=4, seq=32, r=8, quant=8, kernels=args.kernels,
+        cache_compress="int8" if args.kernels == "pallas" else "f32",
+    )
+    EdgeSession(spec, log=print).run(hooks=(ConsoleHook(),))
     print("done — backbone untouched, adapter fine-tuned.")
 
 
 if __name__ == "__main__":
-    main(*sys.argv[1:2])
+    main()

@@ -1,11 +1,19 @@
 """Serve a PAC+-personalised model: batched greedy decoding through the
 frozen (quantized) backbone + fine-tuned side network.
 
-    PYTHONPATH=src python examples/serve_personalized.py [arch] [n_tokens]
+``--kernels pallas`` routes the frozen decode through the pallas OpSet
+(`repro.core.opset`): the QKV/MLP projections consume the still-quantized
+INT8 weights via `quant_matmul` instead of dequantize-then-dense (the
+side network and LM head stay on the ref ops — they are the trainable/fp
+math). Off-TPU the kernels run in interpreter mode: a correctness demo,
+not a speed claim.
+
+    PYTHONPATH=src python examples/serve_personalized.py \
+        [--arch xlstm-125m] [--tokens 24] [--kernels ref|pallas]
 """
 
+import argparse
 import functools
-import sys
 import time
 
 import jax
@@ -18,21 +26,29 @@ from repro.core.quantization import quantize_tree
 from repro.models import backbone as bb
 
 
-def main(arch: str = "xlstm-125m", n_new: int = 24) -> None:
-    cfg = get_arch(arch).reduced()
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="xlstm-125m")
+    ap.add_argument("--tokens", type=int, default=24, help="tokens to generate")
+    ap.add_argument("--kernels", default="ref", choices=["ref", "pallas"],
+                    help="OpSet for the frozen backbone decode")
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch).reduced()
     backbone = quantize_tree(bb.init_backbone(jax.random.PRNGKey(0), cfg), bits=8, min_size=1024)
     adapter = init_adapter(jax.random.PRNGKey(1), cfg, r=8)
 
     B, MAXLEN = 4, 64
     cache = bb.init_cache(cfg, B, MAXLEN)
     acache = init_adapter_cache(cfg, B, MAXLEN, r=8)
-    step = jax.jit(functools.partial(steps.pac_decode_step, cfg=cfg, r=8))
+    step = jax.jit(functools.partial(
+        steps.pac_decode_step, cfg=cfg, r=8, kernel_impl=args.kernels))
 
     prompt = jax.random.randint(jax.random.PRNGKey(2), (B, 8), 0, cfg.vocab)
     tok = prompt[:, :1]
     out_tokens = []
-    t0 = time.time()
-    for t in range(prompt.shape[1] + n_new):
+    t0 = time.perf_counter()
+    for t in range(prompt.shape[1] + args.tokens):
         if cfg.frontend:
             inp = {"embeds": jnp.zeros((B, 1, cfg.d_model))}
         else:
@@ -43,15 +59,12 @@ def main(arch: str = "xlstm-125m", n_new: int = 24) -> None:
         else:
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             out_tokens.append(tok)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     gen = jnp.concatenate(out_tokens, axis=1)
-    print(f"arch={cfg.name} batch={B}: generated {gen.shape[1]} tokens/seq "
-          f"in {dt:.2f}s ({B * gen.shape[1] / dt:.1f} tok/s)")
+    print(f"arch={cfg.name} batch={B} kernels={args.kernels}: generated "
+          f"{gen.shape[1]} tokens/seq in {dt:.2f}s ({B * gen.shape[1] / dt:.1f} tok/s)")
     print("sample:", gen[0][:16].tolist())
 
 
 if __name__ == "__main__":
-    main(
-        sys.argv[1] if len(sys.argv) > 1 else "xlstm-125m",
-        int(sys.argv[2]) if len(sys.argv) > 2 else 24,
-    )
+    main()

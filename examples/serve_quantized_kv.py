@@ -3,11 +3,16 @@
 vs the f32 baseline — prints the cache/weight bytes and verifies the
 generated tokens agree.
 
-    PYTHONPATH=src python examples/serve_quantized_kv.py [arch] [n_tokens]
+``--kernels pallas`` additionally runs the quantized leg's decode
+through the pallas OpSet (still-quantized projections in `quant_matmul`;
+interpret mode off-TPU).
+
+    PYTHONPATH=src python examples/serve_quantized_kv.py \
+        [--arch internlm2-1.8b] [--tokens 16] [--kernels ref|pallas]
 """
 
+import argparse
 import functools
-import sys
 import time
 
 import jax
@@ -23,14 +28,23 @@ def _cache_bytes(cache):
     return sum(t.size * t.dtype.itemsize for t in jax.tree.leaves(cache))
 
 
-def main(arch: str = "internlm2-1.8b", n_new: int = 16) -> None:
-    cfg = get_arch(arch).reduced()
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--tokens", type=int, default=16, help="tokens to generate")
+    ap.add_argument("--kernels", default="ref", choices=["ref", "pallas"],
+                    help="OpSet for the quantized leg's backbone decode")
+    args = ap.parse_args()
+    n_new = args.tokens
+
+    cfg = get_arch(args.arch).reduced()
     bp_f32 = bb.init_backbone(jax.random.PRNGKey(0), cfg)
     bp_q = quantize_tree(bp_f32, bits=8, min_size=1024)
     B, MAXLEN = 4, 48
-    step = jax.jit(functools.partial(steps.decode_step, cfg=cfg))
+    step_f = jax.jit(functools.partial(steps.decode_step, cfg=cfg))
+    step_q = jax.jit(functools.partial(steps.decode_step, cfg=cfg, kernel_impl=args.kernels))
 
-    def generate(params, cache):
+    def generate(step, params, cache):
         tok = jax.random.randint(jax.random.PRNGKey(2), (B, 1), 0, cfg.vocab)
         toks, last = [], None
         for t in range(n_new):
@@ -41,16 +55,16 @@ def main(arch: str = "internlm2-1.8b", n_new: int = 16) -> None:
             last = logits
         return jnp.concatenate(toks, 1), cache, last
 
-    t0 = time.time()
-    ref, c_f, lg_f = generate(bp_f32, bb.init_cache(cfg, B, MAXLEN))
-    t_f = time.time() - t0
+    t0 = time.perf_counter()
+    ref, c_f, lg_f = generate(step_f, bp_f32, bb.init_cache(cfg, B, MAXLEN))
+    t_f = time.perf_counter() - t0
 
-    t0 = time.time()
-    out, c_q, lg_q = generate(bp_q, bb.init_cache(cfg, B, MAXLEN, kv_quant=8))
-    t_q = time.time() - t0
+    t0 = time.perf_counter()
+    out, c_q, lg_q = generate(step_q, bp_q, bb.init_cache(cfg, B, MAXLEN, kv_quant=8))
+    t_q = time.perf_counter() - t0
 
     agree = float(jnp.mean((ref == out).astype(jnp.float32)))
-    print(f"arch={cfg.name}  {n_new} tokens × batch {B}")
+    print(f"arch={cfg.name}  {n_new} tokens × batch {B}  kernels={args.kernels}")
     print(f"  weights: f32 {tree_storage_bytes(bp_f32)/2**20:.1f} MB -> int8 "
           f"{tree_storage_bytes(bp_q)/2**20:.1f} MB")
     print(f"  KV cache: f32 {_cache_bytes(c_f)/2**20:.1f} MB -> int8+scales "
@@ -67,8 +81,8 @@ def main(arch: str = "internlm2-1.8b", n_new: int = 16) -> None:
     for t in range(n_new):
         inp = ({"embeds": jnp.zeros((B, 1, cfg.d_model))} if cfg.frontend
                else {"tokens": forced[:, t : t + 1]})
-        lf, cf = step(bp_f32, inp, cf, jnp.int32(t))
-        lq, cq = step(bp_q, inp, cq, jnp.int32(t))
+        lf, cf = step_f(bp_f32, inp, cf, jnp.int32(t))
+        lq, cq = step_q(bp_q, inp, cq, jnp.int32(t))
         worst = max(worst, float(jnp.max(jnp.abs(lq - lf))) / (float(jnp.max(jnp.abs(lf))) + 1e-6))
     print(f"  max relative logit deviation (teacher-forced, int8 W + int8 KV): {worst:.2%}")
     assert worst < 0.10, "quantized serving diverged from the f32 reference"
@@ -76,7 +90,4 @@ def main(arch: str = "internlm2-1.8b", n_new: int = 16) -> None:
 
 
 if __name__ == "__main__":
-    main(
-        sys.argv[1] if len(sys.argv) > 1 else "internlm2-1.8b",
-        int(sys.argv[2]) if len(sys.argv) > 2 else 16,
-    )
+    main()

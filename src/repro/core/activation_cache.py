@@ -110,11 +110,25 @@ class _CTensor:
         return self.data.nbytes + (0 if self.scale is None else self.scale.nbytes)
 
 
-def _compress(x, policy: str, own: bool = False) -> _CTensor:
+def _compress(x, policy: str, own: bool = False, orig_last: Optional[int] = None) -> _CTensor:
     """``own=True`` guarantees the payload owns its buffer: a same-dtype
     conversion is a no-copy view, and an entry holding a view of e.g. one
     row of a (B,S,d) batch array would pin the whole batch in RAM — the
-    byte budget would no longer bound real memory."""
+    byte budget would no longer bound real memory.
+
+    ``x`` may already BE storage form: an int8 ``{"q", "scale"}`` dict as
+    emitted at the tap site by the pallas OpSet (``emit_tap``). It is
+    adopted as-is — no recompress, no f32 round-trip — provided the
+    policy is int8 and ``orig_last`` names the unpadded feature width."""
+    if isinstance(x, dict):
+        if policy != "int8":
+            raise ValueError(
+                f"storage-form (q/scale) tap requires the int8 policy, got {policy!r}"
+            )
+        q = np.asarray(x["q"])
+        scale = np.asarray(x["scale"])
+        last = q.shape[-1] if orig_last is None else orig_last
+        return _CTensor("int8", q, scale, last, q.shape[-1] // scale.shape[-1])
     x = np.asarray(x)
     if policy in ("f32", "bf16"):
         target = np.float32 if policy == "f32" else ml_dtypes.bfloat16
@@ -407,17 +421,22 @@ class ActivationCache:
             return tuple(_raw_part(ct) for ct in parts)
         return tuple(_decompress(ct, dtype) for ct in parts)
 
-    def put_batch(self, keys, b0: jax.Array, taps: jax.Array, b_final=None) -> None:
+    def put_batch(self, keys, b0, taps, b_final=None,
+                  orig_last: Optional[int] = None) -> None:
         """b0: (B,S,d); taps: (n_p,B,S,d); b_final: (B,S,d) — device
-        arrays from epoch 1 (one device→host gather each, not B).
+        arrays from epoch 1 (one device→host gather each, not B). Each
+        may instead arrive already in storage form — the int8
+        ``{"q", "scale"}`` dict a pallas OpSet emits at the tap site —
+        and is adopted without recompression (``orig_last`` = the
+        unpadded feature width, d).
 
         Compression runs once on the whole batch array and per-sequence
         entries are sliced (with copies) out of the result — block-wise
         quantization along the last axis makes the payloads bit-identical
         to per-sequence compression at 1/B the dispatch overhead."""
-        cb0 = _compress(np.asarray(b0), self.compress)
-        ctaps = _compress(np.asarray(taps), self.compress)
-        cbf = None if b_final is None else _compress(np.asarray(b_final), self.compress)
+        cb0 = _compress(b0, self.compress, orig_last=orig_last)
+        ctaps = _compress(taps, self.compress, orig_last=orig_last)
+        cbf = None if b_final is None else _compress(b_final, self.compress, orig_last=orig_last)
         for i, k in enumerate(keys):
             entry = CacheEntry(
                 _ct_index(cb0, i),

@@ -1,0 +1,288 @@
+"""OpSet — the dispatch seam between the model math and its kernels.
+
+The frozen-backbone forward (epoch 1, prefill, decode) is built from a
+handful of primitive ops: the dense matmuls of the QKV/MLP projections,
+the attention core, the embedding gather, the norms/rope, and — for
+PAC+ — the *tap emission* that hands each period's hidden state to the
+activation cache. An :class:`OpSet` bundles one implementation of each
+primitive behind a tiny object, and the model layer
+(:mod:`repro.models.backbone` / :mod:`repro.models.layers`) calls only
+the OpSet — it never imports :mod:`repro.kernels` (CI greps for this),
+so every kernel variant plugs in here and nowhere else.
+
+Two implementations ship:
+
+* ``ref`` — the dense jnp oracle. ``prepare_block`` dequantizes the
+  whole block up front (the historical dequantize-then-dense idiom) and
+  every op is plain jnp, so the forward is **bit-identical** to the
+  pre-OpSet model code and stays differentiable (the PAC+ adapter runs
+  its own blocks through the same ``apply_block`` with this OpSet).
+* ``pallas`` — the storage-width fast path (paper §IV-D on TPU).
+  INT8/INT4 block weights stay *quantized*: the projections run the
+  fused in-VMEM-dequant :func:`repro.kernels.quant_matmul.quant_matmul`
+  (HBM weight traffic at integer width), attention runs the Pallas
+  flash kernel, the embedding gathers int8 rows and dequantizes only
+  the gathered (B,S) slice, and ``emit_tap`` quantizes each tap at the
+  tap site into the activation cache's storage form (``tap_policy`` =
+  the cache's compress policy) — no f32 HBM round-trip between the
+  backbone forward and the cache. Forward-only: the PAC+ steps
+  ``stop_gradient`` the frozen path, so no VJP is needed (the trainable
+  adapter side keeps the ``ref`` ops).
+
+Off-TPU the pallas OpSet runs the kernels in interpreter mode
+(``interpret=None`` auto-selects, exactly like
+:mod:`repro.kernels.cached_step`) — bit-accurate, slow; the CI path.
+
+The registry is the extension point ROADMAP items 1/2/4 plug into:
+``register_opset("paged", ...)`` etc. without touching the model code.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.quantization import QTensor, dequantize, maybe_dequantize_tree, quantize
+
+# quantization block of emitted int8 taps — must match the activation
+# cache's block (activation_cache._INT8_BLOCK) so tap-site quantization
+# is bit-identical to cache-side compression
+TAP_BLOCK = 128
+
+TAP_POLICIES = ("f32", "bf16", "int8")
+
+
+def _pad_axis(x, axis: int, pad: int):
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+class OpSet:
+    """One implementation of the backbone's primitive ops.
+
+    Subclasses override the compute-bearing ops (``matmul``,
+    ``attention``, ``embed_lookup``, ``prepare_block``, ``emit_tap``);
+    the norm/rope passthroughs below are shared — no variant has a
+    reason to change their numerics, but they route through the OpSet so
+    a future variant (e.g. a fused-norm kernel) can.
+    """
+
+    name: str = "abstract"
+    tap_policy: str = "f32"
+
+    # -- block parameter preparation ------------------------------------
+
+    def prepare_block(self, p, spec):
+        """Make one block's (gathered) params consumable by this OpSet's
+        ops. Called once per block inside ``apply_block``."""
+        raise NotImplementedError
+
+    # -- compute ops ----------------------------------------------------
+
+    def matmul(self, x, w):
+        """``x @ w`` where ``w`` is a plain array or a :class:`QTensor`."""
+        raise NotImplementedError
+
+    def attention(self, q, k, v, cfg, spec, block_k: int = 1024):
+        """Causal (train/prefill) attention core. q: (B,S,H,hd);
+        k, v: (B,S,Hkv,hd), rope applied. Returns (B,S,H·hd)."""
+        raise NotImplementedError
+
+    def embed_lookup(self, embed, tokens):
+        """Token embedding gather; ``embed`` may be a QTensor."""
+        raise NotImplementedError
+
+    def emit_tap(self, h):
+        """A PAC+ tap leaving the backbone forward, in the form the
+        activation cache stores (identity for the f32 policy)."""
+        raise NotImplementedError
+
+    # -- shared passthroughs (norms / rope) -----------------------------
+
+    def rms_norm(self, x, weight, eps: float = 1e-6):
+        from repro.models.layers import rms_norm
+
+        return rms_norm(x, weight, eps)
+
+    def apply_rope(self, x, positions, theta: float = 10_000.0):
+        from repro.models.layers import apply_rope
+
+        return apply_rope(x, positions, theta)
+
+    def apply_mrope(self, x, positions, theta: float = 1_000_000.0):
+        from repro.models.layers import apply_mrope
+
+        return apply_mrope(x, positions, theta)
+
+
+class RefOpSet(OpSet):
+    """The dense jnp oracle — bit-identical to the pre-OpSet model code."""
+
+    name = "ref"
+
+    def __init__(self, tap_policy: str = "f32", interpret=None):
+        # taps leave the ref forward in f32 regardless of the cache
+        # policy: compression stays the cache's job on this path
+        self.tap_policy = "f32"
+        self.interpret = None
+
+    def prepare_block(self, p, spec):
+        return maybe_dequantize_tree(p)
+
+    def matmul(self, x, w):
+        if isinstance(w, QTensor):
+            w = dequantize(w)
+        return x @ w
+
+    def attention(self, q, k, v, cfg, spec, block_k: int = 1024):
+        from repro.models.layers import ref_attention_core
+
+        return ref_attention_core(q, k, v, cfg, spec, block_k)
+
+    def embed_lookup(self, embed, tokens):
+        return jnp.take(maybe_dequantize_tree(embed), tokens, axis=0)
+
+    def emit_tap(self, h):
+        return h
+
+
+class PallasOpSet(OpSet):
+    """Storage-width frozen-path ops: quantized matmuls, Pallas flash
+    attention, taps quantized at the tap site. Forward-only (the PAC+
+    steps stop-gradient the frozen path); plain-array weights fall back
+    to dense jnp — the kernels buy nothing on an unquantized backbone.
+    """
+
+    name = "pallas"
+
+    def __init__(self, tap_policy: str = "f32", interpret=None):
+        if tap_policy not in TAP_POLICIES:
+            raise ValueError(
+                f"tap_policy must be one of {TAP_POLICIES}, got {tap_policy!r}")
+        from repro.kernels.cached_step import _auto_interpret
+
+        self.tap_policy = tap_policy
+        self.interpret = _auto_interpret(interpret)
+
+    def prepare_block(self, p, spec):
+        """Keep the matmul weights quantized — only the leaves with no
+        quantized kernel (norm gains; SSM mixers and MoE experts, whose
+        scans/einsums are documented dense fallbacks) are dequantized."""
+        out = {"ln1": maybe_dequantize_tree(p["ln1"])}
+        if spec.kind == "attn":
+            out["mixer"] = p["mixer"]  # wq/wk/wv/wo feed quant_matmul
+        else:
+            out["mixer"] = maybe_dequantize_tree(p["mixer"])
+        if "ffn" in p:
+            out["ln2"] = maybe_dequantize_tree(p["ln2"])
+            if spec.moe:
+                out["ffn"] = maybe_dequantize_tree(p["ffn"])
+            else:
+                out["ffn"] = p["ffn"]  # wi/wg/wo feed quant_matmul
+        return out
+
+    def matmul(self, x, w):
+        if not isinstance(w, QTensor):
+            return x @ w
+        from repro.kernels.quant_matmul import quant_matmul
+
+        lead, K = x.shape[:-1], x.shape[-1]
+        x2 = x.reshape(-1, K)
+        M = x2.shape[0]
+        # pad-and-slice ragged M/K to the kernel's clamped block
+        # multiples (bm=128, bk=256); N = n_blocks·128 is always aligned
+        if M > 128:
+            x2 = _pad_axis(x2, 0, -M % 128)
+        q, scale = w.q, w.scale
+        if K > 256:
+            pad = -K % 256
+            x2 = _pad_axis(x2, 1, pad)
+            q = _pad_axis(q, 0, pad)
+            scale = _pad_axis(scale, 0, pad)
+        out = quant_matmul(x2, q, scale, bits=w.bits, interpret=self.interpret)
+        return out[:M, : w.orig_last].reshape(lead + (w.orig_last,))
+
+    def attention(self, q, k, v, cfg, spec, block_k: int = 1024):
+        from repro.kernels.flash_attention import flash_attention_tpu
+        from repro.models.layers import _repeat_kv
+
+        B, S, _, hd = q.shape
+        H = cfg.n_heads
+        # the Pallas kernel derives positions from its grid ids, so it
+        # needs the standard repeated-KV layout (the ref OpSet's
+        # grouped-head fold would misnumber the query rows)
+        k = _repeat_kv(k, H // cfg.n_kv_heads)
+        v = _repeat_kv(v, H // cfg.n_kv_heads)
+
+        def fold(t):
+            return t.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+
+        q3, k3, v3 = fold(q), fold(k), fold(v)
+        Sp = S if S <= 256 else -(-S // 256) * 256
+        if Sp != S:
+            # pad-and-slice: padded KV rows sit at positions >= S, which
+            # the causal mask excludes for every real query row
+            q3, k3, v3 = (_pad_axis(t, 1, Sp - S) for t in (q3, k3, v3))
+        o = flash_attention_tpu(
+            q3, k3, v3, causal=True, window=spec.window,
+            attn_softcap=cfg.attn_softcap, interpret=self.interpret,
+        )[:, :S]
+        return o.reshape(B, H, S, hd).transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+
+    def embed_lookup(self, embed, tokens):
+        if not isinstance(embed, QTensor):
+            return jnp.take(embed, tokens, axis=0)
+        # gather at storage width: int8 payload rows + scale rows, then
+        # dequantize only the gathered (B,S) slice — never the full
+        # (vocab, d) f32 table
+        q = jnp.take(embed.q, tokens, axis=0)
+        scale = jnp.take(embed.scale, tokens, axis=0)
+        return dequantize(QTensor(q, scale, embed.bits, embed.block, embed.orig_last))
+
+    def emit_tap(self, h):
+        if self.tap_policy == "f32":
+            return h
+        if self.tap_policy == "bf16":
+            return h.astype(jnp.bfloat16)
+        qt = quantize(h.astype(jnp.float32), bits=8, block=TAP_BLOCK)
+        return {"q": qt.q, "scale": qt.scale}
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY = {"ref": RefOpSet, "pallas": PallasOpSet}
+
+
+def register_opset(name: str, factory) -> None:
+    """Register an OpSet factory (``factory(tap_policy=, interpret=)``)
+    under ``name`` — the plug-in point for future op variants (paged
+    decode, MoE/SSM kernels) that must not touch the model code."""
+    _REGISTRY[name] = factory
+
+
+@functools.lru_cache(maxsize=None)
+def _cached(name: str, tap_policy: str, interpret):
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown OpSet {name!r}; registered: {sorted(_REGISTRY)}")
+    return factory(tap_policy=tap_policy, interpret=interpret)
+
+
+def get_opset(name, tap_policy: str = "f32",
+              interpret: Optional[bool] = None) -> OpSet:
+    """Resolve an OpSet by name (``"ref"``/``"pallas"``/registered).
+    Instances are cached per (name, tap_policy, interpret) — they are
+    stateless dispatch objects, resolved inside traced code from the
+    jit-hashable string the steps carry."""
+    if isinstance(name, OpSet):
+        return name
+    return _cached(name, tap_policy, interpret)

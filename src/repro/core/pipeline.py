@@ -205,9 +205,11 @@ def pipeline_apply(
 
     stage_fn(params_slice, h) -> h' — one stage's compute (same shape
     in/out). With ``collect_taps=True`` it must instead return
-    ``(h', taps)`` where ``taps`` has shape (periods_per_stage, mb, ...)
-    — the stage's intermediate activations, e.g. the post-period hidden
-    states PAC+'s adapter consumes.
+    ``(h', taps)`` where ``taps`` is an array — or any pytree of arrays,
+    e.g. the int8 ``{"q", "scale"}`` storage form a pallas OpSet emits —
+    whose every leaf has shape (periods_per_stage, mb, ...): the stage's
+    intermediate activations, e.g. the post-period hidden states PAC+'s
+    adapter consumes.
 
     stage_params: leaves with leading dim n_stages (sharded over ``axis``).
     x_micro: (n_micro, mb, ...) micro-batched input. When ``batch_axis``
@@ -215,9 +217,10 @@ def pipeline_apply(
     — hybrid data×pipeline parallelism on a 2-D ``(dp, stage)`` mesh.
 
     Returns the (n_micro, mb, ...) outputs of the LAST stage, or with
-    ``collect_taps`` a pair ``(outs, taps)`` where ``taps`` is
-    (n_micro, n_periods_total, mb, ...) assembled across stages in layer
-    order (stage s owns periods [s·pp, (s+1)·pp)).
+    ``collect_taps`` a pair ``(outs, taps)`` where ``taps`` mirrors the
+    stage-tap pytree with every leaf (n_micro, n_periods_total, mb, ...)
+    assembled across stages in layer order (stage s owns periods
+    [s·pp, (s+1)·pp)).
 
     ``periods_per_stage`` declares a *ragged* partition (a planner
     :class:`~repro.core.planner.StagePartition` executed for real): every
@@ -253,8 +256,12 @@ def pipeline_apply(
             if collect_taps:
                 slot_m = jnp.clip(m, 0, n_micro - 1)
                 valid = jnp.logical_and(m >= 0, m < n_micro)
-                upd = jax.lax.dynamic_update_index_in_dim(taps_buf, taps, slot_m, 0)
-                taps_buf = jnp.where(valid, upd, taps_buf)
+                taps_buf = jax.tree.map(
+                    lambda buf, tp: jnp.where(
+                        valid, jax.lax.dynamic_update_index_in_dim(buf, tp, slot_m, 0), buf
+                    ),
+                    taps_buf, taps,
+                )
             # collect finished micro-batches on the last stage
             out_t = t - (n_stages - 1)
             slot = jnp.clip(out_t, 0, n_micro - 1)
@@ -268,8 +275,11 @@ def pipeline_apply(
 
         if collect_taps:
             # probe the per-stage tap shape without committing compute
+            # (a pytree of ShapeDtypeStructs — storage-form taps are dicts)
             tap_shape = jax.eval_shape(stage_fn, local_params, xs[0])[1]
-            taps_buf = jnp.zeros((n_micro,) + tap_shape.shape, tap_shape.dtype)
+            taps_buf = jax.tree.map(
+                lambda t: jnp.zeros((n_micro,) + t.shape, t.dtype), tap_shape
+            )
         (state, outs, taps_buf), _ = jax.lax.scan(
             step, (state, outs, taps_buf), jnp.arange(T)
         )
@@ -279,13 +289,20 @@ def pipeline_apply(
         if collect_taps:
             # (1, n_micro, pp, mb, ...) sharded over `axis` on the new
             # leading dim → global (n_stages, n_micro, pp, mb, ...)
-            return outs, taps_buf[None]
+            return outs, jax.tree.map(lambda t: t[None], taps_buf)
         return outs
 
     b = batch_axis
     x_spec = P(None, b) if b else P()
     if collect_taps:
-        out_specs = (x_spec, P(axis, None, None, b) if b else P(axis))
+        # the tap *structure* (not shapes) decides the out_specs pytree:
+        # every leaf — bare array or {"q","scale"} storage form — carries
+        # (stage, micro, pp, mb, ...), so one spec shape fits all leaves
+        tap_struct = jax.eval_shape(
+            stage_fn, jax.tree.map(lambda p: p[0], stage_params), x_micro[0]
+        )[1]
+        leaf_spec = P(axis, None, None, b) if b else P(axis)
+        out_specs = (x_spec, jax.tree.map(lambda _: leaf_spec, tap_struct))
     else:
         out_specs = x_spec
     fn = shard_map(
@@ -300,17 +317,21 @@ def pipeline_apply(
     outs, taps = fn(stage_params, x_micro)
     # (n_stages, n_micro, pp, mb, ...) → (n_micro, n_periods, mb, ...);
     # stage-major period order == layer order (stack_stages is contiguous)
-    taps = jnp.moveaxis(taps, 0, 1)
+    taps = jax.tree.map(lambda t: jnp.moveaxis(t, 0, 1), taps)
     if periods_per_stage is not None and len(set(periods_per_stage)) > 1:
         # ragged partition: keep each stage's first pp_s (active) periods,
         # concatenated in stage order == true layer order
         assert len(periods_per_stage) == n_stages, (periods_per_stage, n_stages)
-        taps = jnp.concatenate(
-            [taps[:, s, :pp] for s, pp in enumerate(periods_per_stage)], axis=1
+        taps = jax.tree.map(
+            lambda t: jnp.concatenate(
+                [t[:, s, :pp] for s, pp in enumerate(periods_per_stage)], axis=1
+            ),
+            taps,
         )
     else:
-        taps = taps.reshape(
-            (taps.shape[0], taps.shape[1] * taps.shape[2]) + taps.shape[3:]
+        taps = jax.tree.map(
+            lambda t: t.reshape((t.shape[0], t.shape[1] * t.shape[2]) + t.shape[3:]),
+            taps,
         )
     return outs, taps
 

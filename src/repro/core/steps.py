@@ -29,6 +29,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core import peft
+from repro.core.opset import get_opset
 from repro.core.parallel_adapters import (
     adapter_decode,
     adapter_forward,
@@ -61,24 +62,57 @@ def pac_loss_fn(adapter_params, backbone_params, cfg, batch, r: int = 8):
 
 
 def pac_train_step(
-    backbone_params, adapter_params, opt_state, batch, *, cfg, r: int = 8, lr=1e-3, clip=1.0
+    backbone_params, adapter_params, opt_state, batch, *, cfg, r: int = 8, lr=1e-3,
+    clip=1.0, kernel_impl: str = "ref", tap_policy: str = "f32", interpret=None,
 ):
     """Epoch-1 PAC+ step.
 
+    ``kernel_impl`` selects the frozen-path OpSet: ``"ref"`` (default) is
+    the dense jnp oracle, bit-identical to the historical step;
+    ``"pallas"`` runs the frozen forward on still-quantized weights
+    (quant_matmul / Pallas flash attention) and emits the activation
+    triple through ``emit_tap`` — with ``tap_policy`` = the cache's
+    compress policy it leaves the step already in storage form, and the
+    adapter loss consumes it via the fused cached-step kernels (the
+    frozen path is stop-gradient'd, so no VJP is needed through Pallas).
+
     Returns (loss, adapter_params', opt_state', (b0, taps, b_final))."""
+    if kernel_impl == "ref":
+        b_final, taps, x, positions = backbone_forward(
+            backbone_params, cfg, batch, collect_taps=True, return_inputs=True
+        )
+        x, b_final, taps = jax.lax.stop_gradient((x, b_final, taps))
+
+        def loss_fn(ap):
+            logits = pac_logits(backbone_params, ap, cfg, x, taps, b_final, positions, r)
+            return cross_entropy(logits, batch["labels"])
+
+        loss, grads = jax.value_and_grad(loss_fn)(adapter_params)
+        grads, _ = clip_by_global_norm(grads, clip)
+        adapter_params, opt_state = adamw_update(adapter_params, grads, opt_state, lr=lr)
+        return loss, adapter_params, opt_state, (x, taps, b_final)
+
+    from repro.kernels.cached_step import cached_loss_parts
+
+    ops = get_opset(kernel_impl, tap_policy, interpret)
     b_final, taps, x, positions = backbone_forward(
-        backbone_params, cfg, batch, collect_taps=True, return_inputs=True
+        backbone_params, cfg, batch, collect_taps=True, return_inputs=True, ops=ops
     )
-    x, b_final, taps = jax.lax.stop_gradient((x, b_final, taps))
+    b0_s, bf_s = ops.emit_tap(x), ops.emit_tap(b_final)
+    b0_s, taps, bf_s = jax.lax.stop_gradient((b0_s, taps, bf_s))
+    cached = {"b0": b0_s, "taps": taps, "b_final": bf_s, "labels": batch["labels"]}
 
     def loss_fn(ap):
-        logits = pac_logits(backbone_params, ap, cfg, x, taps, b_final, positions, r)
-        return cross_entropy(logits, batch["labels"])
+        num, den = cached_loss_parts(
+            backbone_params, ap, cfg, cached, positions, r,
+            impl=kernel_impl, interpret=interpret,
+        )
+        return num / jnp.maximum(den, 1)
 
     loss, grads = jax.value_and_grad(loss_fn)(adapter_params)
     grads, _ = clip_by_global_norm(grads, clip)
     adapter_params, opt_state = adamw_update(adapter_params, grads, opt_state, lr=lr)
-    return loss, adapter_params, opt_state, (x, taps, b_final)
+    return loss, adapter_params, opt_state, (b0_s, taps, bf_s)
 
 
 def _cached_positions(cached_batch, cfg):
@@ -196,9 +230,10 @@ def dp_cached_train_step(
 # ---------------------------------------------------------------------------
 
 
-def _backbone_stage_fn(cfg, masked: bool = False):
+def _backbone_stage_fn(cfg, masked: bool = False, ops=None):
     """One pipeline stage of the frozen backbone: scan this stage's periods,
-    emitting every period's hidden state (the PAC+ taps).
+    emitting every period's hidden state (the PAC+ taps) through
+    ``ops.emit_tap`` (identity when no OpSet is given — the ref path).
 
     ``masked=True`` is the ragged-partition variant: the stage params are
     ``{"blocks": padded_slab, "mask": (max_pp,)}`` (see
@@ -208,9 +243,11 @@ def _backbone_stage_fn(cfg, masked: bool = False):
     """
     from repro.models.backbone import apply_block
 
+    emit = ops.emit_tap if ops is not None else (lambda h: h)
+
     def run_period(bs, hh, positions):
         for i, spec in enumerate(cfg.pattern):
-            hh = apply_block(bs[i], hh, cfg, spec, positions)
+            hh = apply_block(bs[i], hh, cfg, spec, positions, ops=ops)
         return hh
 
     def _positions(h):
@@ -227,7 +264,7 @@ def _backbone_stage_fn(cfg, masked: bool = False):
             def period_fn(carry, xs):
                 bs, m = xs
                 hh = jnp.where(m, run_period(bs, carry, positions), carry)
-                return hh, hh
+                return hh, emit(hh)
 
             return jax.lax.scan(
                 period_fn, h, (tuple(local["blocks"]), local["mask"])
@@ -240,7 +277,7 @@ def _backbone_stage_fn(cfg, masked: bool = False):
 
         def period_fn(carry, bs):
             hh = run_period(bs, carry, positions)
-            return hh, hh
+            return hh, emit(hh)
 
         return jax.lax.scan(period_fn, h, tuple(block_slice))
 
@@ -250,7 +287,8 @@ def _backbone_stage_fn(cfg, masked: bool = False):
 def pipeline_pac_loss_and_grads(
     backbone_params, adapter_params, batch, *, cfg, mesh, n_micro,
     r: int = 8, dp_axis: str = "dp", stage_axis: str = "stage",
-    partition=None,
+    partition=None, kernel_impl: str = "ref", tap_policy: str = "f32",
+    interpret=None,
 ):
     """Distributed epoch-1 forward+grads: staged backbone forward over the
     ``stage`` mesh axis (1F1B micro-batching via :func:`pipeline_apply`),
@@ -265,8 +303,16 @@ def pipeline_pac_loss_and_grads(
     periods-per-stage, runs the padding as masked identity periods, and
     re-assembles the taps in true layer order from the uneven boundaries.
 
+    ``kernel_impl="pallas"`` runs every stage's frozen forward on the
+    pallas OpSet (still-quantized weights in quant_matmul, Pallas flash
+    attention) and emits taps in ``tap_policy`` storage form — each stage's
+    tap leaves ``pipeline_apply`` as a pytree (int8 payload + scales under
+    the int8 policy), and the adapter loss consumes it through the fused
+    cached-step kernels.
+
     Returns (loss, adapter_grads, (b0, taps, b_final)) — the activation
-    triple is what the cache captures; all are global (dp-sharded) arrays.
+    triple is what the cache captures; all are global (dp-sharded) arrays
+    (or storage-form pytrees under a pallas tap policy).
     """
     from repro.core.pipeline import pipeline_apply, stack_stages, stack_stages_ragged
     from repro.models.backbone import cross_entropy_parts
@@ -300,14 +346,15 @@ def pipeline_pac_loss_and_grads(
             "pipeline_pac_train_step supports implicit (arange) positions only"
         )
 
-    x, positions = embed_inputs(backbone_params, cfg, batch)
+    ops = None if kernel_impl == "ref" else get_opset(kernel_impl, tap_policy, interpret)
+    x, positions = embed_inputs(backbone_params, cfg, batch, ops=ops)
     B = x.shape[0]
     # staged backbone forward: (B,S,d) → micro-batched → 1F1B pipeline
     # (dp_microbatches owns the layout contract + divisibility checks)
     x_micro = DataPipeline.dp_microbatches({"x": x}, n_micro, dp)["x"]
     if partition is None:
         stage_params = stack_stages(backbone_params["blocks"], n_stages)
-        stage_fn = _backbone_stage_fn(cfg)
+        stage_fn = _backbone_stage_fn(cfg, ops=ops)
         pps = None
     else:  # ragged plan: padded slabs + per-stage active-period masks
         stage_params = {
@@ -316,7 +363,7 @@ def pipeline_pac_loss_and_grads(
             ),
             "mask": jnp.asarray(partition.masks(), dtype=bool),
         }
-        stage_fn = _backbone_stage_fn(cfg, masked=True)
+        stage_fn = _backbone_stage_fn(cfg, masked=True, ops=ops)
         pps = partition.periods_per_stage
     b_final_micro, taps_micro = pipeline_apply(
         stage_fn, stage_params, x_micro, mesh,
@@ -324,16 +371,29 @@ def pipeline_pac_loss_and_grads(
         collect_taps=True, periods_per_stage=pps,
     )
     b_final = b_final_micro.reshape((B,) + b_final_micro.shape[2:])
-    # (n_micro, n_p, mb, S, d) → (n_p, B, S, d) — micro-major sample order
-    taps = jnp.moveaxis(taps_micro, 1, 0)
-    taps = taps.reshape(taps.shape[:1] + (B,) + taps.shape[3:])
-    b0, taps, b_final = jax.lax.stop_gradient((x, taps, b_final))
+    # (n_micro, n_p, mb, S, ·) → (n_p, B, S, ·) — micro-major sample order
+    # (tree-mapped: a storage-form tap is a pytree of payload + scales)
+    taps = jax.tree.map(lambda t: jnp.moveaxis(t, 1, 0), taps_micro)
+    taps = jax.tree.map(lambda t: t.reshape(t.shape[:1] + (B,) + t.shape[3:]), taps)
+    b0 = x if ops is None else ops.emit_tap(x)
+    b_final = b_final if ops is None else ops.emit_tap(b_final)
+    b0, taps, b_final = jax.lax.stop_gradient((b0, taps, b_final))
 
     # adapter loss + grads, dp-sharded batch, explicit AllReduce
     def spmd_grads(ap, head, b0_l, taps_l, bf_l, labels_l, pos_l):
         def loss_fn(a):
-            logits = pac_logits(head, a, cfg, b0_l, taps_l, bf_l, pos_l, r)
-            num, den = cross_entropy_parts(logits, labels_l)
+            if ops is None:
+                logits = pac_logits(head, a, cfg, b0_l, taps_l, bf_l, pos_l, r)
+                num, den = cross_entropy_parts(logits, labels_l)
+            else:
+                from repro.kernels.cached_step import cached_loss_parts
+
+                cached = {"b0": b0_l, "taps": taps_l, "b_final": bf_l,
+                          "labels": labels_l}
+                num, den = cached_loss_parts(
+                    head, a, cfg, cached, pos_l, r,
+                    impl=kernel_impl, interpret=interpret,
+                )
             if dp > 1:  # global mean: psum parts, not pmean of local means
                 num = jax.lax.psum(num, dp_axis)
                 den = jax.lax.psum(den, dp_axis)
@@ -367,7 +427,8 @@ def pipeline_pac_loss_and_grads(
 def pipeline_pac_train_step(
     backbone_params, adapter_params, opt_state, batch, *, cfg, mesh, n_micro,
     r: int = 8, lr=1e-3, clip=1.0, dp_axis: str = "dp", stage_axis: str = "stage",
-    partition=None,
+    partition=None, kernel_impl: str = "ref", tap_policy: str = "f32",
+    interpret=None,
 ):
     """Epoch-1 PAC+ step on a 2-D ``(dp, stage)`` mesh — the distributed
     twin of :func:`pac_train_step` (same signature plus mesh/n_micro).
@@ -382,7 +443,8 @@ def pipeline_pac_train_step(
     loss, grads, acts = pipeline_pac_loss_and_grads(
         backbone_params, adapter_params, batch, cfg=cfg, mesh=mesh,
         n_micro=n_micro, r=r, dp_axis=dp_axis, stage_axis=stage_axis,
-        partition=partition,
+        partition=partition, kernel_impl=kernel_impl, tap_policy=tap_policy,
+        interpret=interpret,
     )
     grads, _ = clip_by_global_norm(grads, clip)
     adapter_params, opt_state = adamw_update(adapter_params, grads, opt_state, lr=lr)
@@ -429,37 +491,43 @@ def houlsby_train_step(backbone_params, ad_params, opt_state, batch, *, cfg, lr=
 # ---------------------------------------------------------------------------
 
 
-def prefill_step(params, batch, *, cfg):
+def prefill_step(params, batch, *, cfg, kernel_impl: str = "ref", interpret=None):
     """Full-prompt forward (inference-prefill). Returns last-position logits."""
-    logits = backbone_logits(params, cfg, batch)
-    return logits[:, -1:, :]
+    ops = None if kernel_impl == "ref" else get_opset(kernel_impl, interpret=interpret)
+    h, _ = backbone_forward(params, cfg, batch, ops=ops)
+    return logits_from_hidden(params, cfg, h)[:, -1:, :]
 
 
-def decode_step(params, token_batch, cache, pos, *, cfg):
+def decode_step(params, token_batch, cache, pos, *, cfg, kernel_impl: str = "ref",
+                interpret=None):
     """One-token decode against the cache. Returns (logits, cache')."""
-    return backbone_decode(params, cfg, token_batch, cache, pos)
+    ops = None if kernel_impl == "ref" else get_opset(kernel_impl, interpret=interpret)
+    return backbone_decode(params, cfg, token_batch, cache, pos, ops=ops)
 
 
 def pac_decode_step(
-    backbone_params, adapter_params, token_batch, cache, adapter_cache, pos, *, cfg, r: int = 8
+    backbone_params, adapter_params, token_batch, cache, adapter_cache, pos, *, cfg,
+    r: int = 8, kernel_impl: str = "ref", interpret=None,
 ):
-    """Serve the personalised model: backbone decode + side-network decode."""
-    from repro.core.quantization import maybe_dequantize_tree
-    from repro.models.backbone import apply_block_decode
-    from repro.models.layers import rms_norm
+    """Serve the personalised model: backbone decode + side-network decode.
 
+    The frozen backbone decode dispatches through the ``kernel_impl``
+    OpSet (quantized projections under ``"pallas"``); the side network
+    and LM head stay on the ref ops — they are the trainable/fp math."""
+    from repro.models.backbone import _REF_OPS, apply_block_decode
+
+    ops = _REF_OPS if kernel_impl == "ref" else get_opset(kernel_impl, interpret=interpret)
     if "embeds" in token_batch:
         x = token_batch["embeds"]
     else:
-        embed = maybe_dequantize_tree(backbone_params["embed"])
-        x = jnp.take(embed, token_batch["tokens"], axis=0)
+        x = ops.embed_lookup(backbone_params["embed"], token_batch["tokens"])
 
     def period_fn(carry, xs):
         block_slice, cache_slice = xs
         h = carry
         new_caches = []
         for i, spec in enumerate(cfg.pattern):
-            h, nc = apply_block_decode(block_slice[i], h, cfg, spec, cache_slice[i], pos)
+            h, nc = apply_block_decode(block_slice[i], h, cfg, spec, cache_slice[i], pos, ops=ops)
             new_caches.append(nc)
         return h, (tuple(new_caches), h)
 

@@ -59,17 +59,22 @@ corpus, or the compression policy invalidates the cache loudly.
     PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
         --reduced --cache-dir act_cache --cache-compress int8
 
-With ``--kernels pallas`` the cached (epoch≥2) step runs the fused
-Pallas fast path (`repro.kernels.cached_step`): cache entries reach the
-step in their *storage* form (int8 payload + scales, bf16) and are
-dequantised in VMEM inside the fused dequant×adapter kernel, and the
-LM-head cross-entropy streams over vocab blocks so the (B,S,vocab)
-logits are never materialised. Off-TPU the kernels run in interpreter
-mode (bit-accurate, not fast) — the default ``--kernels ref`` is the
-dense jnp oracle the Pallas path is tested against.
+With ``--kernels pallas`` the whole run leaves the dense-jnp path — the
+flag selects the OpSet (`repro.core.opset`) every step dispatches
+through. Epoch 1's frozen forward runs on still-quantized block params
+(`quant_matmul` dequantises INT8/INT4 weights in VMEM) with Pallas flash
+attention, and its taps are quantized *at the tap site* into the cache's
+storage form (``--cache-compress``) — no f32 HBM round-trip before
+``put_batch``. The cached (epoch≥2) step runs the fused Pallas fast path
+(`repro.kernels.cached_step`): entries reach the step as int8 payload +
+scales / bf16 and dequantise in VMEM, and the LM-head cross-entropy
+streams over vocab blocks so the (B,S,vocab) logits are never
+materialised. Off-TPU the kernels run in interpreter mode (bit-accurate,
+not fast) — the default ``--kernels ref`` is the dense jnp oracle the
+Pallas path is tested against.
 
     PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
-        --reduced --cache-compress int8 --kernels pallas
+        --reduced --quant 8 --cache-compress int8 --kernels pallas
 """
 
 from __future__ import annotations
@@ -130,11 +135,12 @@ def main() -> None:
                     help="price one lowered period with the HLO cost model "
                          "and plan from measured LayerCosts")
     ap.add_argument("--kernels", default="ref", choices=["ref", "pallas"],
-                    help="cached-epoch compute path: 'ref' = dense jnp "
-                         "oracle; 'pallas' = fused dequant×adapter + "
-                         "blockwise-CE kernels (interpret mode off-TPU), "
-                         "with compressed cache entries decompressed "
-                         "on-device instead of on the host")
+                    help="compute path for epoch 1 AND the cached epochs: "
+                         "'ref' = dense jnp oracle; 'pallas' = OpSet "
+                         "dispatch to quant_matmul/flash-attention on the "
+                         "epoch-1 frozen forward (taps emitted in cache "
+                         "storage form) plus the fused dequant×adapter + "
+                         "blockwise-CE cached step (interpret mode off-TPU)")
     args = ap.parse_args()
 
     try:

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import psharding
+from repro.core.opset import get_opset
 from repro.core.quantization import maybe_dequantize_tree
 from repro.models import ssm
 from repro.models.layers import (
@@ -39,6 +40,12 @@ from repro.models.layers import (
     softcap,
 )
 from repro.models.moe import init_moe, moe_forward, moe_forward_dense
+
+# Every forward below dispatches its primitive ops (matmul, attention,
+# embedding gather, tap emission) through an OpSet (core/opset.py) — the
+# one seam kernel variants plug into. `ops=None` means the dense jnp
+# oracle, bit-identical to the historical dequantize-then-dense code.
+_REF_OPS = get_opset("ref")
 
 # ---------------------------------------------------------------------------
 # Init
@@ -99,16 +106,19 @@ def abstract_backbone(cfg, dtype=jnp.float32):
 # ---------------------------------------------------------------------------
 
 
-def apply_block(p, x, cfg, spec, positions):
+def apply_block(p, x, cfg, spec, positions, ops=None):
+    ops = ops if ops is not None else _REF_OPS
     # FSDP weight gather (§Perf iteration 2): replicate this layer's slice
     # over the data axes so GSPMD all-gathers weights (not activations).
-    # Gather BEFORE dequantizing — the int8 payload is 4× cheaper to move
+    # Gather BEFORE preparing — the int8 payload is 4× cheaper to move
     # (§Perf kimi iter H). No-op outside a `model`-axis mesh.
     p = psharding.gather_for_compute(p)
-    p = maybe_dequantize_tree(p)
-    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    # ref: dequantize the whole block; pallas: matmul weights stay
+    # quantized and feed quant_matmul inside ops.matmul
+    p = ops.prepare_block(p, spec)
+    h = ops.rms_norm(x, p["ln1"], cfg.norm_eps)
     if spec.kind == "attn":
-        mix = attention_forward(p["mixer"], h, cfg, spec, positions)
+        mix = attention_forward(p["mixer"], h, cfg, spec, positions, ops=ops)
     elif spec.kind == "mamba":
         mix = ssm.mamba_forward(p["mixer"], h, cfg)
     elif spec.kind == "mlstm":
@@ -117,29 +127,29 @@ def apply_block(p, x, cfg, spec, positions):
         mix = ssm.slstm_forward(p["mixer"], h, cfg)
     x = psharding.constrain_hidden(x + mix)
     if "ffn" in p:
-        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        h = ops.rms_norm(x, p["ln2"], cfg.norm_eps)
         if spec.moe and cfg.moe is not None:
             x = x + moe_forward(p["ffn"], h, cfg.moe)
         else:
-            x = x + mlp_forward(p["ffn"], h)
+            x = x + mlp_forward(p["ffn"], h, ops=ops)
         x = psharding.constrain_hidden(x)
     return x
 
 
-def embed_inputs(params, cfg, batch: dict):
+def embed_inputs(params, cfg, batch: dict, ops=None):
     """Token embedding or stub-frontend embeddings.
 
     batch: {"tokens": (B,S) int32} and/or {"embeds": (B,S,d)};
     optional {"positions": (B,S) or (3,B,S)}.
     """
+    ops = ops if ops is not None else _REF_OPS
     if "embeds" in batch:
         x = batch["embeds"]
         B, S = x.shape[:2]
     else:
         tokens = batch["tokens"]
         B, S = tokens.shape
-        embed = maybe_dequantize_tree(params["embed"])
-        x = jnp.take(embed, tokens, axis=0)
+        x = ops.embed_lookup(params["embed"], tokens)
     if "positions" in batch:
         positions = batch["positions"]
     elif cfg.rope == "mrope":
@@ -151,21 +161,27 @@ def embed_inputs(params, cfg, batch: dict):
 
 
 def backbone_forward(params, cfg, batch: dict, collect_taps: bool = False,
-                     return_inputs: bool = False):
+                     return_inputs: bool = False, ops=None):
     """Returns (final_hidden (B,S,d), taps (n_periods,B,S,d) | None).
 
     With ``return_inputs=True`` the embedded input and positions are also
     returned — ``(final, taps, x0, positions)`` — so callers that need
     ``b0`` (the PAC+ steps) don't pay the embedding lookup twice.
+
+    Taps pass through ``ops.emit_tap`` at the tap site: under the pallas
+    OpSet with an int8/bf16 tap policy they leave the scan already in
+    cache storage form (dict of int8 payload + scales / bf16) — no f32
+    HBM round-trip on the way to the activation cache.
     """
-    x, positions = embed_inputs(params, cfg, batch)
+    ops = ops if ops is not None else _REF_OPS
+    x, positions = embed_inputs(params, cfg, batch, ops=ops)
     x0 = x
 
     def period_fn(carry, block_slice):
         h = carry
         for i, spec in enumerate(cfg.pattern):
-            h = apply_block(block_slice[i], h, cfg, spec, positions)
-        return h, (h if collect_taps else None)
+            h = apply_block(block_slice[i], h, cfg, spec, positions, ops=ops)
+        return h, (ops.emit_tap(h) if collect_taps else None)
 
     x, taps = jax.lax.scan(period_fn, x, tuple(params["blocks"]))
     if return_inputs:
@@ -269,14 +285,15 @@ def abstract_cache(cfg, B: int, max_len: int, dtype=jnp.float32, kv_quant=None):
     return jax.eval_shape(lambda: init_cache(cfg, B, max_len, dtype, kv_quant=kv_quant))
 
 
-def apply_block_decode(p, x, cfg, spec, cache, pos):
-    p = maybe_dequantize_tree(p)
-    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+def apply_block_decode(p, x, cfg, spec, cache, pos, ops=None):
+    ops = ops if ops is not None else _REF_OPS
+    p = ops.prepare_block(p, spec)
+    h = ops.rms_norm(x, p["ln1"], cfg.norm_eps)
     if spec.kind == "attn":
         if "k_scale" in cache:  # INT8 KV cache (beyond-paper serving)
-            mix, new_cache = attention_decode_quant(p["mixer"], h, cfg, spec, cache, pos)
+            mix, new_cache = attention_decode_quant(p["mixer"], h, cfg, spec, cache, pos, ops=ops)
         else:
-            mix, ck, cv = attention_decode(p["mixer"], h, cfg, spec, cache["k"], cache["v"], pos)
+            mix, ck, cv = attention_decode(p["mixer"], h, cfg, spec, cache["k"], cache["v"], pos, ops=ops)
             new_cache = {"k": ck, "v": cv}
     elif spec.kind == "mamba":
         mix, new_cache = ssm.mamba_decode(p["mixer"], h, cfg, cache)
@@ -286,34 +303,34 @@ def apply_block_decode(p, x, cfg, spec, cache, pos):
         mix, new_cache = ssm.slstm_decode(p["mixer"], h, cfg, cache)
     x = x + mix
     if "ffn" in p:
-        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        h = ops.rms_norm(x, p["ln2"], cfg.norm_eps)
         if spec.moe and cfg.moe is not None:
             # decode: T = B tokens — widen capacity (cheap at decode T) to
             # make token drops rare; serving should not drop tokens.
             x = x + moe_forward(p["ffn"], h, cfg.moe, capacity_factor=2.0 * cfg.moe.capacity_factor)
         else:
-            x = x + mlp_forward(p["ffn"], h)
+            x = x + mlp_forward(p["ffn"], h, ops=ops)
     return x, new_cache
 
 
-def backbone_decode(params, cfg, token_batch: dict, cache, pos):
+def backbone_decode(params, cfg, token_batch: dict, cache, pos, ops=None):
     """One decode step.
 
     token_batch: {"tokens": (B,1)} or {"embeds": (B,1,d)}; pos: () int32 —
     the index the new token is written at. Returns (logits (B,1,V), cache').
     """
+    ops = ops if ops is not None else _REF_OPS
     if "embeds" in token_batch:
         x = token_batch["embeds"]
     else:
-        embed = maybe_dequantize_tree(params["embed"])
-        x = jnp.take(embed, token_batch["tokens"], axis=0)
+        x = ops.embed_lookup(params["embed"], token_batch["tokens"])
 
     def period_fn(carry, xs):
         block_slice, cache_slice = xs
         h = carry
         new_caches = []
         for i, spec in enumerate(cfg.pattern):
-            h, nc = apply_block_decode(block_slice[i], h, cfg, spec, cache_slice[i], pos)
+            h, nc = apply_block_decode(block_slice[i], h, cfg, spec, cache_slice[i], pos, ops=ops)
             new_caches.append(nc)
         return h, tuple(new_caches)
 

@@ -283,19 +283,22 @@ def init_attention(rng, cfg, dtype=jnp.float32):
     }
 
 
-def _project_qkv(p, x, cfg, positions):
+def _project_qkv(p, x, cfg, positions, ops=None):
     B, S, _ = x.shape
     hd = cfg.hd
-    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, hd)
-    k = (x @ p["wk"]).reshape(B, S, cfg.n_kv_heads, hd)
-    v = (x @ p["wv"]).reshape(B, S, cfg.n_kv_heads, hd)
+    mm = ops.matmul if ops is not None else (lambda a, w: a @ w)
+    q = mm(x, p["wq"]).reshape(B, S, cfg.n_heads, hd)
+    k = mm(x, p["wk"]).reshape(B, S, cfg.n_kv_heads, hd)
+    v = mm(x, p["wv"]).reshape(B, S, cfg.n_kv_heads, hd)
     if cfg.rope == "rope":
         pos = positions if positions.ndim == 2 else positions[0]
-        q = apply_rope(q, pos, cfg.rope_theta)
-        k = apply_rope(k, pos, cfg.rope_theta)
+        rope = ops.apply_rope if ops is not None else apply_rope
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
     elif cfg.rope == "mrope":
-        q = apply_mrope(q, positions, cfg.rope_theta)
-        k = apply_mrope(k, positions, cfg.rope_theta)
+        mrope = ops.apply_mrope if ops is not None else apply_mrope
+        q = mrope(q, positions, cfg.rope_theta)
+        k = mrope(k, positions, cfg.rope_theta)
     return q, k, v
 
 
@@ -308,24 +311,19 @@ def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
     )
 
 
-def attention_forward(
-    p,
-    x: jax.Array,
-    cfg,
-    spec,
-    positions: jax.Array,
-    block_k: int = 1024,
-) -> jax.Array:
-    """Full-sequence (train/prefill) attention. x: (B,S,d); positions: (B,S) or (3,B,S)."""
-    B, S, _ = x.shape
-    q, k, v = _project_qkv(p, x, cfg, positions)
-    # §Perf (kimi iters F+G): gather K/V over `model` once *before* the
-    # GQA head expansion (n_kv_heads, not n_heads — 8× less traffic on
-    # kimi), and run *grouped-head* flash: the n_rep query heads sharing
-    # a KV head are folded into the query-row axis, so the repeated KV is
-    # never materialized (iter F's repeat cost +29 GB of HBM temp).
+def ref_attention_core(q, k, v, cfg, spec, block_k: int = 1024) -> jax.Array:
+    """The jnp attention core on projected/rope'd q,k,v — the `ref`
+    OpSet's attention. q: (B,S,H,hd); k,v: (B,S,Hkv,hd) -> (B,S,H·hd).
+
+    §Perf (kimi iters F+G): gather K/V over `model` once *before* the
+    GQA head expansion (n_kv_heads, not n_heads — 8× less traffic on
+    kimi), and run *grouped-head* flash: the n_rep query heads sharing
+    a KV head are folded into the query-row axis, so the repeated KV is
+    never materialized (iter F's repeat cost +29 GB of HBM temp).
+    """
     from repro.core.psharding import constrain_spec
 
+    B, S, _, _ = q.shape
     k = constrain_spec(k, ("batch", None, None, None))
     v = constrain_spec(v, ("batch", None, None, None))
     n_rep = cfg.n_heads // cfg.n_kv_heads
@@ -342,7 +340,24 @@ def attention_forward(
         cfg.attn_softcap, min(block_k, S),
     )
     o = o.reshape(B, hkv, n_rep, S, hd).transpose(0, 3, 1, 2, 4)
-    o = o.reshape(B, S, cfg.n_heads * hd)
+    return o.reshape(B, S, cfg.n_heads * hd)
+
+
+def attention_forward(
+    p,
+    x: jax.Array,
+    cfg,
+    spec,
+    positions: jax.Array,
+    block_k: int = 1024,
+    ops=None,
+) -> jax.Array:
+    """Full-sequence (train/prefill) attention. x: (B,S,d); positions: (B,S) or (3,B,S)."""
+    q, k, v = _project_qkv(p, x, cfg, positions, ops)
+    if ops is not None:
+        o = ops.attention(q, k, v, cfg, spec, block_k)
+        return ops.matmul(o, p["wo"])
+    o = ref_attention_core(q, k, v, cfg, spec, block_k)
     return o @ p["wo"]
 
 
@@ -357,7 +372,7 @@ def quantize_kv_token(t: jax.Array):
     return q.astype(jnp.int8), scale
 
 
-def attention_decode_quant(p, x, cfg, spec, cache, pos):
+def attention_decode_quant(p, x, cfg, spec, cache, pos, ops=None):
     """Single-token decode against an INT8 KV cache (beyond-paper serving
     feature — the paper's Eq. 1 absmax quantization applied to the KV
     cache, per (token, kv-head) scales).
@@ -372,7 +387,7 @@ def attention_decode_quant(p, x, cfg, spec, cache, pos):
         positions = jnp.broadcast_to(pos, (3, B, 1)).astype(jnp.int32)
     else:
         positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
-    q, k, v = _project_qkv(p, x, cfg, positions)
+    q, k, v = _project_qkv(p, x, cfg, positions, ops)
     kq, ks = quantize_kv_token(k)
     vq, vs = quantize_kv_token(v)
     new_cache = {
@@ -398,7 +413,8 @@ def attention_decode_quant(p, x, cfg, spec, cache, pos):
     w = w * jnp.swapaxes(new_cache["v_scale"], 1, 2)[:, :, None, :]  # fold V scales
     o = jnp.einsum("bgrs,bsgd->bgrd", w, new_cache["v"].astype(jnp.float32))
     o = o.reshape(B, 1, cfg.n_heads * hd).astype(x.dtype)
-    return o @ p["wo"], new_cache
+    out = ops.matmul(o, p["wo"]) if ops is not None else o @ p["wo"]
+    return out, new_cache
 
 
 def attention_decode(
@@ -410,6 +426,7 @@ def attention_decode(
     cache_v: jax.Array,
     pos: jax.Array,
     positions_full=None,
+    ops=None,
 ):
     """Single-token decode. x: (B,1,d); cache_[kv]: (B,Smax,Hkv,hd); pos: () int32.
 
@@ -421,7 +438,7 @@ def attention_decode(
         positions = jnp.broadcast_to(pos, (3, B, 1)).astype(jnp.int32)
     else:
         positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
-    q, k, v = _project_qkv(p, x, cfg, positions)
+    q, k, v = _project_qkv(p, x, cfg, positions, ops)
     cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), pos, axis=1)
     cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), pos, axis=1)
     n_rep = cfg.n_heads // cfg.n_kv_heads
@@ -441,7 +458,8 @@ def attention_decode(
     w = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bgrs,bsgd->bgrd", w, vv.astype(jnp.float32))
     o = o.reshape(B, 1, cfg.n_heads * hd).astype(x.dtype)
-    return o @ p["wo"], cache_k, cache_v
+    out = ops.matmul(o, p["wo"]) if ops is not None else o @ p["wo"]
+    return out, cache_k, cache_v
 
 
 # ---------------------------------------------------------------------------
@@ -458,5 +476,8 @@ def init_mlp(rng, d: int, d_ff: int, dtype=jnp.float32):
     }
 
 
-def mlp_forward(p, x: jax.Array) -> jax.Array:
+def mlp_forward(p, x: jax.Array, ops=None) -> jax.Array:
+    if ops is not None:
+        mm = ops.matmul
+        return mm(jax.nn.silu(mm(x, p["wg"])) * mm(x, p["wi"]), p["wo"])
     return (jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])) @ p["wo"]

@@ -321,16 +321,22 @@ class EdgeSession:
         use_pallas = spec.kernels == "pallas"
         self._use_pallas = use_pallas
         self._steps_mod = steps
+        # Under pallas, epoch-1 taps are quantized at the tap site into
+        # the cache's storage form (no f32 HBM round-trip); put_batch
+        # then adopts them without recompressing.
+        tap_policy = spec.cache_compress if use_pallas else "f32"
         if distributed:
             # epoch-1: staged backbone forward over `stage` + dp AllReduce
             self._step1 = jax.jit(functools.partial(
                 steps.pipeline_pac_train_step, cfg=cfg, mesh=self.mesh,
-                n_micro=n_micro, r=spec.r, lr=spec.lr, partition=partition))
+                n_micro=n_micro, r=spec.r, lr=spec.lr, partition=partition,
+                kernel_impl=spec.kernels, tap_policy=tap_policy))
             # built on first cached batch (needs its tree structure)
             self._stepN = None
         else:
             self._step1 = jax.jit(functools.partial(
-                steps.pac_train_step, cfg=cfg, r=spec.r, lr=spec.lr))
+                steps.pac_train_step, cfg=cfg, r=spec.r, lr=spec.lr,
+                kernel_impl=spec.kernels, tap_policy=tap_policy))
             # donate (adapter, opt) — the cached step returns them
             # updated, so the old buffers are reused in place every step
             self._stepN = jax.jit(
@@ -440,7 +446,10 @@ class EdgeSession:
             loss, self.adapter, self.opt, (b0, taps, bf) = self._step1(
                 self.backbone, self.adapter, self.opt, batch)
             if self.spec.use_cache:
-                self.cache.put_batch(ids, b0, taps, bf)
+                # orig_last: storage-form (pallas) taps are padded to the
+                # quant block on the last axis; d_model is the true width
+                self.cache.put_batch(ids, b0, taps, bf,
+                                     orig_last=self.cfg.d_model)
             cache_hit = False
         else:
             b0, taps, bf = (jax.tree.map(jnp.asarray, h) for h in hit)

@@ -66,7 +66,9 @@ class RunSpec:
     pool: Optional[int] = None
     save_plan: Optional[str] = None
     calibrate: bool = False
-    # cached-epoch compute path
+    # compute path for BOTH the epoch-1 frozen forward (OpSet dispatch:
+    # quantized matmuls, Pallas flash attention, storage-form taps) and
+    # the cached-epoch step ("ref" = dense jnp oracle)
     kernels: str = "ref"
     # outputs
     ckpt: Optional[str] = None

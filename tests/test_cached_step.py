@@ -243,16 +243,19 @@ def _losses(stdout):
 
 @pytest.mark.parametrize("compress", ["f32", "int8"])
 def test_cli_kernels_pallas_matches_ref(compress):
-    """ISSUE 5 acceptance: a full trainer run with --kernels pallas
-    converges to the same per-epoch losses as --kernels ref (exactly the
-    same cache entries feed both; epochs ≥1 exercise the cached step)."""
+    """ISSUE 5/7 acceptance: a full trainer run with --kernels pallas
+    converges to the same per-epoch losses as --kernels ref. Since the
+    OpSet dispatch, --kernels pallas also runs epoch 0's frozen forward
+    on the pallas path: with the f32 policy that is interpret-tolerance
+    identical, while under int8 compression the taps are quantized at
+    the tap site, so every epoch carries the (bounded) tap-quantization
+    error — the cache entries themselves are bit-identical either way."""
     ref_out = _run_cli("--cache-compress", compress, "--kernels", "ref")
     pal_out = _run_cli("--cache-compress", compress, "--kernels", "pallas")
     l_ref, l_pal = _losses(ref_out), _losses(pal_out)
     assert len(l_ref) == 3 and len(l_pal) == 3
-    # epoch 0 is the uncached forward — identical by construction; the
-    # cached epochs must agree to f32 tolerance across compute paths
+    tol = 5e-4 if compress == "f32" else 5e-2
     for a, b in zip(l_ref, l_pal):
-        assert abs(a - b) < 5e-4, (l_ref, l_pal)
+        assert abs(a - b) < tol, (l_ref, l_pal)
     # sanity: training is actually learning (losses decrease)
     assert l_ref[-1] < l_ref[0] and l_pal[-1] < l_pal[0]

@@ -137,8 +137,11 @@ def test_runspec_validates_saved_plan_pool(tmp_path):
 
 
 def _reference_losses(spec, *, kernel_impl="ref", compressed=False):
-    """The pre-refactor single-device trainer loop, composed by hand from
-    the primitive steps — the oracle the session must match bit-for-bit."""
+    """The single-device trainer loop, composed by hand from the
+    primitive steps exactly as the session composes them (since the
+    OpSet dispatch, ``kernel_impl`` governs epoch 1 too: the pallas
+    epoch-1 step emits taps in the cache's storage form) — the oracle
+    the session must match bit-for-bit."""
     import functools
 
     import jax
@@ -162,8 +165,10 @@ def _reference_losses(spec, *, kernel_impl="ref", compressed=False):
                         seed=spec.seed)
     cache = ActivationCache(budget_bytes=spec.cache_budget_mb << 20,
                             compress=spec.cache_compress)
+    tap_policy = spec.cache_compress if kernel_impl == "pallas" else "f32"
     step1 = jax.jit(functools.partial(
-        steps.pac_train_step, cfg=cfg, r=spec.r, lr=spec.lr))
+        steps.pac_train_step, cfg=cfg, r=spec.r, lr=spec.lr,
+        kernel_impl=kernel_impl, tap_policy=tap_policy))
     stepN = jax.jit(functools.partial(
         steps.pac_cached_train_step, cfg=cfg, r=spec.r, lr=spec.lr,
         kernel_impl=kernel_impl), donate_argnums=(1, 2))
@@ -181,7 +186,7 @@ def _reference_losses(spec, *, kernel_impl="ref", compressed=False):
                     "labels": batch["labels"]})
             else:
                 loss, ap, opt, (b0, taps, bf) = step1(bp, ap, opt, batch)
-                cache.put_batch(ids, b0, taps, bf)
+                cache.put_batch(ids, b0, taps, bf, orig_last=cfg.d_model)
             losses.append(float(loss))
         out.append(losses)
     return out
