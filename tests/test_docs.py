@@ -1,6 +1,6 @@
 """Fast tier-1 leg of the docs CI: link integrity + block extraction.
 
-The CI ``docs`` job additionally *executes* the marked blocks
+The CI ``lint`` job additionally *executes* the marked blocks
 (``python tools/check_docs.py --exec``); here we keep the cheap
 invariants in every local run: no broken relative links anywhere, and
 the extraction machinery actually finds the marked blocks (an

@@ -1,0 +1,384 @@
+"""palint self-tests: every rule fires on a bad fixture and stays quiet
+on the matching good one, suppressions work, ``--json`` has the
+documented shape, and — the real gate — the repo itself lints clean.
+
+Fixtures are miniature source trees written under ``tmp_path`` and
+analyzed through the :func:`tools.palint.run` API with ``root`` pointed
+at the fixture, so rule paths (``src/repro/models/...``) behave exactly
+as in the real repo. palint never imports the code it analyzes, so the
+fixtures only need to *parse*.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+if REPO not in sys.path:
+    sys.path.insert(0, REPO)
+
+from tools.palint import Context, run  # noqa: E402
+
+
+def lint_tree(tmp_path, files, **ctx_kw):
+    """Write ``{relpath: source}`` under tmp_path and lint the tree."""
+    for rel, source in files.items():
+        path = tmp_path / rel
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(source)
+    root = str(tmp_path)
+    return run(root=root, ctx=Context(root=root, **ctx_kw))
+
+
+def rules_fired(result):
+    return {f.rule for f in result.findings}
+
+
+# ---------------------------------------------------------------- compat
+
+
+def test_compat_surface_flags_gated_apis_outside_compat(tmp_path):
+    result = lint_tree(tmp_path, {
+        "src/repro/models/m.py": (
+            "from jax.experimental.shard_map import shard_map\n"
+            "import jax\n"
+            "mesh = jax.make_mesh((2,), ('dp',), axis_types=(1,))\n"
+        ),
+    })
+    assert rules_fired(result) == {"compat-surface"}
+    assert len(result.findings) == 2  # the import and the kwarg
+
+
+def test_compat_surface_allows_compat_py(tmp_path):
+    result = lint_tree(tmp_path, {
+        "src/repro/compat.py": (
+            "from jax.experimental.shard_map import shard_map\n"
+            "from jax.sharding import AxisType\n"
+        ),
+    })
+    assert result.ok, [f.render() for f in result.findings]
+
+
+# -------------------------------------------------------------- layering
+
+
+def test_layering_models_must_not_import_kernels(tmp_path):
+    result = lint_tree(tmp_path, {
+        "src/repro/models/m.py": "from repro.kernels import quant_matmul\n",
+    })
+    assert rules_fired(result) == {"layering"}
+
+
+def test_layering_examples_must_not_touch_trainer_privates(tmp_path):
+    result = lint_tree(tmp_path, {
+        "examples/e.py": (
+            "from repro.launch.train import _build_state\n"
+            "import repro.launch.train as train\n"
+            "train._run_epoch()\n"
+        ),
+    })
+    assert rules_fired(result) == {"layering"}
+    assert len(result.findings) == 2
+
+
+def test_layering_core_may_import_kernels(tmp_path):
+    result = lint_tree(tmp_path, {
+        "src/repro/core/opset.py": "from repro.kernels import quant_matmul\n",
+        "examples/e.py": "from repro.runtime import EdgeSession\n",
+    })
+    assert result.ok, [f.render() for f in result.findings]
+
+
+# ------------------------------------------------------------ jit-purity
+
+
+def test_jit_purity_flags_host_effects_in_traced_bodies(tmp_path):
+    result = lint_tree(tmp_path, {
+        "src/repro/core/s.py": (
+            "import time\n"
+            "import jax\n"
+            "import numpy as np\n"
+            "@jax.jit\n"
+            "def step(x):\n"
+            "    print('tracing')\n"
+            "    t = time.perf_counter()\n"
+            "    noise = np.random.normal()\n"
+            "    return x + noise + t\n"
+        ),
+    })
+    assert rules_fired(result) == {"jit-purity"}
+    assert len(result.findings) == 3
+
+
+def test_jit_purity_resolves_pallas_call_kernel_by_name(tmp_path):
+    result = lint_tree(tmp_path, {
+        "src/repro/kernels/k.py": (
+            "import jax\n"
+            "from jax.experimental import pallas as pl\n"
+            "def _kernel(x_ref, o_ref):\n"
+            "    print('inside kernel')\n"
+            "    o_ref[...] = x_ref[...]\n"
+            "def launch(x):\n"
+            "    return pl.pallas_call(\n"
+            "        _kernel, out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype)\n"
+            "    )(x)\n"
+        ),
+    })
+    assert rules_fired(result) == {"jit-purity"}
+
+
+def test_jit_purity_ignores_effects_outside_traced_code(tmp_path):
+    result = lint_tree(tmp_path, {
+        "src/repro/core/s.py": (
+            "import time\n"
+            "import jax\n"
+            "@jax.jit\n"
+            "def step(x):\n"
+            "    return x * 2\n"
+            "def bench(x):\n"
+            "    t0 = time.perf_counter()\n"
+            "    y = step(x)\n"
+            "    print(time.perf_counter() - t0)\n"
+            "    return y\n"
+        ),
+    })
+    assert result.ok, [f.render() for f in result.findings]
+
+
+# ------------------------------------------------------- pallas-blockspec
+
+_PALLAS_HEADER = (
+    "import jax\n"
+    "import jax.numpy as jnp\n"
+    "from jax.experimental import pallas as pl\n"
+    "def _k(x_ref, o_ref):\n"
+    "    o_ref[...] = x_ref[...]\n"
+)
+
+
+def test_blockspec_index_map_arity_must_match_grid_rank(tmp_path):
+    result = lint_tree(tmp_path, {
+        "src/repro/kernels/k.py": _PALLAS_HEADER + (
+            "def launch(x):\n"
+            "    return pl.pallas_call(\n"
+            "        _k,\n"
+            "        grid=(2, 2),\n"
+            "        in_specs=[pl.BlockSpec((8, 8), lambda i: (i, 0))],\n"
+            "        out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, j)),\n"
+            "        out_shape=jax.ShapeDtypeStruct((16, 16), jnp.float32),\n"
+            "    )(x)\n"
+        ),
+    })
+    assert rules_fired(result) == {"pallas-blockspec"}
+    (finding,) = result.findings
+    assert "index_map takes 1" in finding.message
+
+
+def test_blockspec_block_must_divide_output_dim(tmp_path):
+    result = lint_tree(tmp_path, {
+        "src/repro/kernels/k.py": _PALLAS_HEADER + (
+            "def launch(x):\n"
+            "    return pl.pallas_call(\n"
+            "        _k,\n"
+            "        grid=(13,),\n"
+            "        out_specs=pl.BlockSpec((8, 100), lambda i: (i, 0)),\n"
+            "        out_shape=jax.ShapeDtypeStruct((100, 100), jnp.float32),\n"
+            "    )(x)\n"
+        ),
+    })
+    assert rules_fired(result) == {"pallas-blockspec"}
+    (finding,) = result.findings
+    assert "does not divide" in finding.message
+
+
+def test_blockspec_vmem_budget_and_per_site_report(tmp_path):
+    huge = _PALLAS_HEADER + (
+        "def launch(x):\n"
+        "    bm = 4096\n"
+        "    return pl.pallas_call(\n"
+        "        _k,\n"
+        "        grid=(2,),\n"
+        "        in_specs=[pl.BlockSpec((bm, bm), lambda i: (i, 0))],\n"
+        "        out_specs=pl.BlockSpec((bm, bm), lambda i: (i, 0)),\n"
+        "        out_shape=jax.ShapeDtypeStruct((8192, 4096), jnp.float32),\n"
+        "    )(x)\n"
+    )
+    result = lint_tree(tmp_path, {"src/repro/kernels/k.py": huge})
+    assert rules_fired(result) == {"pallas-blockspec"}
+    (finding,) = result.findings
+    assert "VMEM" in finding.message
+    # every site gets an informational report, violation or not
+    (report,) = result.reports
+    # 2 blocks x (4096*4096*4 bytes) x2 double-buffering = 256 MiB
+    assert report.data["vmem_bytes"] == 2 * 4096 * 4096 * 4 * 2
+    assert report.data["exact"] is True
+
+    # the same site passes with a raised budget
+    ok = lint_tree(tmp_path, {"src/repro/kernels/k.py": huge},
+                   vmem_budget_bytes=512 * 2**20)
+    assert ok.ok
+
+
+def test_blockspec_clean_site_reports_but_does_not_fire(tmp_path):
+    result = lint_tree(tmp_path, {
+        "src/repro/kernels/k.py": _PALLAS_HEADER + (
+            "def launch(x):\n"
+            "    return pl.pallas_call(\n"
+            "        _k,\n"
+            "        grid=(2, 2),\n"
+            "        in_specs=[pl.BlockSpec((8, 8), lambda i, j: (i, j))],\n"
+            "        out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, j)),\n"
+            "        out_shape=jax.ShapeDtypeStruct((16, 16), jnp.float32),\n"
+            "    )(x)\n"
+        ),
+    })
+    assert result.ok, [f.render() for f in result.findings]
+    assert len(result.reports) == 1
+
+
+# ------------------------------------------------------------- axis-name
+
+
+def test_axis_name_flags_unbound_collective_axis(tmp_path):
+    result = lint_tree(tmp_path, {
+        "src/repro/core/c.py": (
+            "import jax\n"
+            "def allreduce(x):\n"
+            "    return jax.lax.psum(x, 'dp')\n"
+        ),
+    })
+    assert rules_fired(result) == {"axis-name"}
+
+
+def test_axis_name_accepts_mesh_bound_axis(tmp_path):
+    result = lint_tree(tmp_path, {
+        "src/repro/core/c.py": (
+            "import jax\n"
+            "mesh = jax.make_mesh((2,), ('dp',))\n"
+            "def allreduce(x):\n"
+            "    return jax.lax.psum(x, 'dp')\n"
+        ),
+    })
+    assert result.ok, [f.render() for f in result.findings]
+
+
+# ---------------------------------------------------------- storage-form
+
+
+def test_storage_form_flags_eager_dequant_outside_kernels(tmp_path):
+    result = lint_tree(tmp_path, {
+        "src/repro/models/m.py": (
+            "import jax.numpy as jnp\n"
+            "def widen(w):\n"
+            "    return w['q'].astype(jnp.float32) * w['scale']\n"
+        ),
+    })
+    assert rules_fired(result) == {"storage-form"}
+
+
+def test_storage_form_allows_kernels_and_cache(tmp_path):
+    result = lint_tree(tmp_path, {
+        "src/repro/kernels/k.py": (
+            "import jax.numpy as jnp\n"
+            "def widen(w):\n"
+            "    return w['q'].astype(jnp.float32) * w['scale']\n"
+        ),
+    })
+    assert result.ok, [f.render() for f in result.findings]
+
+
+# ---------------------------------------------------------- bench-schema
+
+
+GOOD_BENCH = {
+    "arch": "gemma2-2b", "backend": "cpu", "pallas_interpret_mode": True,
+    "batch": 8, "seq": 128, "steps": 4, "step_ms": 12.5,
+}
+
+
+def test_bench_schema_accepts_valid_record(tmp_path):
+    result = lint_tree(tmp_path, {
+        "BENCH_good.json": json.dumps(GOOD_BENCH),
+    })
+    assert result.ok, [f.render() for f in result.findings]
+
+
+def test_bench_schema_flags_missing_and_mistyped_keys(tmp_path):
+    bad = dict(GOOD_BENCH)
+    del bad["pallas_interpret_mode"]   # required key missing
+    bad["step_ms"] = "12.5"            # numeric field as string
+    result = lint_tree(tmp_path, {"BENCH_bad.json": json.dumps(bad)})
+    assert rules_fired(result) == {"bench-schema"}
+    assert len(result.findings) == 2
+
+
+# ----------------------------------------------------------- suppression
+
+
+def test_per_line_suppression_silences_named_rule(tmp_path):
+    result = lint_tree(tmp_path, {
+        "src/repro/models/m.py": (
+            "from repro.kernels import quant_matmul"
+            "  # palint: disable=layering  -- fixture exercising suppression\n"
+        ),
+    })
+    assert result.ok, [f.render() for f in result.findings]
+
+
+def test_suppression_is_rule_specific(tmp_path):
+    result = lint_tree(tmp_path, {
+        "src/repro/models/m.py": (
+            "from repro.kernels import quant_matmul"
+            "  # palint: disable=compat-surface\n"
+        ),
+    })
+    assert rules_fired(result) == {"layering"}
+
+
+# --------------------------------------------------- CLI + self-run gate
+
+
+def run_cli(*argv, cwd=REPO):
+    return subprocess.run(
+        [sys.executable, "-m", "tools.palint", *argv],
+        capture_output=True, text=True, cwd=cwd,
+    )
+
+
+def test_cli_json_shape_and_repo_is_clean():
+    proc = run_cli("--json")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    payload = json.loads(proc.stdout)
+    assert set(payload) == {"version", "ok", "files_scanned", "findings",
+                            "reports"}
+    assert payload["ok"] is True and payload["findings"] == []
+    assert payload["files_scanned"] > 50
+    for report in payload["reports"]:
+        assert set(report) == {"rule", "path", "line", "data"}
+
+
+def test_self_run_reports_vmem_for_every_pallas_site():
+    result = run(root=REPO)
+    assert result.ok, [f.render() for f in result.findings]
+    sites = [r for r in result.reports if r.rule == "pallas-blockspec"]
+    assert len(sites) >= 7  # the repo's pallas_call sites, all budgeted
+    assert {r.path for r in sites} >= {
+        "src/repro/kernels/quant_matmul.py",
+        "src/repro/kernels/adapter_fuse.py",
+        "src/repro/kernels/flash_attention.py",
+        "src/repro/kernels/cached_step.py",
+    }
+    for r in sites:
+        assert isinstance(r.data["vmem_bytes"], int)
+        assert r.data["vmem_bytes"] <= r.data["budget_bytes"]
+
+
+def test_cli_nonzero_exit_on_findings(tmp_path):
+    (tmp_path / "src").mkdir()
+    (tmp_path / "src" / "bad.py").write_text(
+        "from jax.experimental.shard_map import shard_map\n"
+    )
+    proc = run_cli("--root", str(tmp_path), cwd=REPO)
+    assert proc.returncode == 1
+    assert "[compat-surface]" in proc.stdout

@@ -1,0 +1,3 @@
+# The repo's maintenance tooling (`palint`, `check_docs`) as an importable
+# package, so CI can run `python -m tools.palint` and tier-1 tests can
+# import the same entry points the workflow invokes.

@@ -24,19 +24,14 @@ import re
 import subprocess
 import sys
 
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if __package__ in (None, ""):  # `python tools/check_docs.py` / tests' import
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from tools.fsutil import doc_files, repo_root  # noqa: E402  (shared with palint)
+
+REPO = repo_root()
 EXEC_MARK = "<!-- docs-exec -->"
 _LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
-
-
-def doc_files(repo: str = REPO) -> list:
-    files = [os.path.join(repo, "README.md")]
-    docs = os.path.join(repo, "docs")
-    if os.path.isdir(docs):
-        files += sorted(
-            os.path.join(docs, f) for f in os.listdir(docs) if f.endswith(".md")
-        )
-    return [f for f in files if os.path.exists(f)]
 
 
 def extract_marked_blocks(path: str) -> list:

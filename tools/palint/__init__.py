@@ -1,0 +1,21 @@
+"""palint — the PAC repo's project-invariant static analyzer.
+
+AST-based rules encode the invariants the architecture depends on
+(compat-surface confinement, models↛kernels layering, jit purity,
+Pallas BlockSpec/VMEM sanity, collective axis-name binding, the
+storage-form no-f32-round-trip contract, benchmark-record schema).
+
+Run ``python -m tools.palint`` from the repo root; see
+``docs/LINTING.md`` for the rule catalog and suppression syntax.
+"""
+
+from tools.palint.engine import (  # noqa: F401
+    Context,
+    Finding,
+    Report,
+    Result,
+    all_rules,
+    run,
+)
+
+__version__ = "1.0"

@@ -1,0 +1,5 @@
+import sys
+
+from tools.palint.cli import main
+
+sys.exit(main())

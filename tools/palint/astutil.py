@@ -1,0 +1,326 @@
+"""AST helpers shared by the palint rules.
+
+Two capabilities every rule leans on:
+
+* **Import-aware name resolution** — :class:`ImportMap` records what each
+  top-level alias in a module refers to, so ``pl.pallas_call`` resolves
+  to ``jax.experimental.pallas.pallas_call`` no matter how the import was
+  spelled. Rules match on *resolved* dotted names, which is what makes
+  them strictly stronger than the text greps they replace (aliasing,
+  ``from x import y as z``, multi-line calls).
+
+* **Best-effort constant resolution** — :class:`ConstEnv` evaluates the
+  integer expressions that feed Pallas block shapes (parameter defaults,
+  straight-line assignments, ``min``/``max`` clamps, conditional
+  expressions). Values carry an ``exact`` bit: a ``min(bk, K)`` with
+  unknown ``K`` still yields the *upper bound* ``bk`` (what a VMEM
+  budget check wants), just marked inexact.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Optional, Tuple
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class ImportMap:
+    """Top-level alias → fully-qualified dotted name for one module."""
+
+    def __init__(self, tree: ast.AST):
+        self.aliases: Dict[str, str] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.aliases[a.asname or a.name.split(".")[0]] = (
+                        a.name if a.asname else a.name.split(".")[0]
+                    )
+            elif isinstance(node, ast.ImportFrom) and node.module and not node.level:
+                for a in node.names:
+                    if a.name == "*":
+                        continue
+                    self.aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+
+    def resolve(self, node: ast.AST) -> Optional[str]:
+        """Resolved dotted name of a Name/Attribute chain (imports applied)."""
+        dn = dotted_name(node)
+        if dn is None:
+            return None
+        head, _, rest = dn.partition(".")
+        full = self.aliases.get(head, head)
+        return f"{full}.{rest}" if rest else full
+
+
+def resolve_call(node: ast.Call, imports: ImportMap) -> Optional[str]:
+    """Resolved dotted name of a call's callee."""
+    return imports.resolve(node.func)
+
+
+def last_segment(resolved: Optional[str]) -> str:
+    return resolved.rsplit(".", 1)[-1] if resolved else ""
+
+
+# ---------------------------------------------------------------------------
+# Constant resolution
+# ---------------------------------------------------------------------------
+
+#: (value, exact) — value None means "could not resolve at all".
+Resolved = Tuple[Optional[float], bool]
+
+_UNKNOWN: Resolved = (None, False)
+
+
+class ConstEnv:
+    """Name → (value, exact) environment for one function scope."""
+
+    def __init__(self):
+        self.values: Dict[str, Resolved] = {}
+
+    def set(self, name: str, res: Resolved) -> None:
+        if res[0] is None and name in self.values:
+            # unresolvable reassignment: keep the previous value as an
+            # estimate but drop the exactness claim (e.g. `bm = min(bm, M)`
+            # with unknown M keeps the default bm as an upper bound)
+            old_val, _ = self.values[name]
+            self.values[name] = (old_val, False)
+        else:
+            self.values[name] = res
+
+    def get(self, name: str) -> Resolved:
+        return self.values.get(name, _UNKNOWN)
+
+    def clear(self, name: str) -> None:
+        """Forget a name entirely (a parameter shadowing a module global)."""
+        self.values[name] = _UNKNOWN
+
+
+def eval_const(node: ast.AST, env: Optional[ConstEnv] = None) -> Resolved:
+    """Best-effort numeric evaluation of an expression AST."""
+    if isinstance(node, ast.Constant):
+        if isinstance(node.value, bool) or not isinstance(node.value, (int, float)):
+            return _UNKNOWN
+        return (node.value, True)
+    if isinstance(node, ast.Name):
+        return env.get(node.id) if env else _UNKNOWN
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        v, e = eval_const(node.operand, env)
+        return (None, False) if v is None else (-v, e)
+    if isinstance(node, ast.BinOp):
+        lv, le = eval_const(node.left, env)
+        rv, re_ = eval_const(node.right, env)
+        if lv is None or rv is None:
+            return _UNKNOWN
+        exact = le and re_
+        try:
+            if isinstance(node.op, ast.Add):
+                return (lv + rv, exact)
+            if isinstance(node.op, ast.Sub):
+                return (lv - rv, exact)
+            if isinstance(node.op, ast.Mult):
+                return (lv * rv, exact)
+            if isinstance(node.op, ast.FloorDiv):
+                return (lv // rv, exact)
+            if isinstance(node.op, ast.Div):
+                return (lv / rv, exact)
+            if isinstance(node.op, ast.Mod):
+                return (lv % rv, exact)
+            if isinstance(node.op, ast.Pow):
+                return (lv ** rv, exact)
+        except (ZeroDivisionError, OverflowError):
+            return _UNKNOWN
+        return _UNKNOWN
+    if isinstance(node, ast.IfExp):
+        test = _eval_bool(node.test, env)
+        if test is None:
+            return _UNKNOWN
+        return eval_const(node.body if test else node.orelse, env)
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+        if node.func.id in ("min", "max") and node.args and not node.keywords:
+            vals = [eval_const(a, env) for a in node.args]
+            resolved = [v for v, _ in vals if v is not None]
+            if not resolved:
+                return _UNKNOWN
+            all_exact = len(resolved) == len(vals) and all(e for _, e in vals)
+            # min over a subset is an upper bound on the true min — usable
+            # (inexact); max over a subset may undershoot, equally inexact
+            pick = min(resolved) if node.func.id == "min" else max(resolved)
+            return (pick, all_exact)
+        if node.func.id == "int" and len(node.args) == 1:
+            v, e = eval_const(node.args[0], env)
+            return _UNKNOWN if v is None else (int(v), e)
+    return _UNKNOWN
+
+
+def _eval_bool(node: ast.AST, env: Optional[ConstEnv]) -> Optional[bool]:
+    """Evaluate a comparison/boolean test, or None when undecidable."""
+    if isinstance(node, ast.Compare) and len(node.ops) == 1:
+        lv, _ = eval_const(node.left, env)
+        rv, _ = eval_const(node.comparators[0], env)
+        if lv is None or rv is None:
+            return None
+        op = node.ops[0]
+        if isinstance(op, ast.Eq):
+            return lv == rv
+        if isinstance(op, ast.NotEq):
+            return lv != rv
+        if isinstance(op, ast.Lt):
+            return lv < rv
+        if isinstance(op, ast.LtE):
+            return lv <= rv
+        if isinstance(op, ast.Gt):
+            return lv > rv
+        if isinstance(op, ast.GtE):
+            return lv >= rv
+    if isinstance(node, ast.Constant) and isinstance(node.value, bool):
+        return node.value
+    return None
+
+
+def scope_nodes(func: ast.AST) -> list:
+    """All nodes lexically in ``func``'s own scope (nested function and
+    lambda bodies excluded), in source order."""
+    out = []
+
+    def visit(node):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+                continue
+            out.append(child)
+            visit(child)
+
+    visit(func)
+    out.sort(key=lambda n: (getattr(n, "lineno", 0), getattr(n, "col_offset", 0)))
+    return out
+
+
+def module_env(tree: ast.AST) -> ConstEnv:
+    """Module-level constants (``QBLOCK = 128`` and friends)."""
+    env = ConstEnv()
+    for node in ast.iter_child_nodes(tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            env.set(node.targets[0].id, eval_const(node.value, env))
+        elif isinstance(node, ast.AnnAssign) and isinstance(node.target, ast.Name) \
+                and node.value is not None:
+            env.set(node.target.id, eval_const(node.value, env))
+    return env
+
+
+def build_env_for(call: ast.Call, func: ast.FunctionDef,
+                  base: Optional[ConstEnv] = None) -> ConstEnv:
+    """Constant environment at ``call``'s site inside ``func``.
+
+    Starts from ``base`` (module-level constants), seeds parameter
+    defaults, then replays every straight-line assignment that textually
+    precedes the call (branch conditions are ignored — later assignments
+    win, losing exactness when a value cannot be resolved).
+    """
+    env = ConstEnv()
+    if base is not None:
+        env.values.update(base.values)
+    args = func.args
+    pos = args.posonlyargs + args.args
+    for arg in pos[:len(pos) - len(args.defaults)]:
+        env.clear(arg.arg)  # parameters shadow module globals
+    for arg, default in zip(pos[len(pos) - len(args.defaults):], args.defaults):
+        env.set(arg.arg, eval_const(default, env))
+    for arg, default in zip(args.kwonlyargs, args.kw_defaults):
+        if default is not None:
+            env.set(arg.arg, eval_const(default, env))
+        else:
+            env.clear(arg.arg)
+
+    stop = call.lineno
+    for node in scope_nodes(func):
+        if getattr(node, "lineno", 0) >= stop:
+            continue
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            target = node.targets[0]
+            if isinstance(target, ast.Name):
+                env.set(target.id, eval_const(node.value, env))
+            elif isinstance(target, ast.Tuple) and isinstance(node.value, ast.Tuple) \
+                    and len(target.elts) == len(node.value.elts):
+                for t, v in zip(target.elts, node.value.elts):
+                    if isinstance(t, ast.Name):
+                        env.set(t.id, eval_const(v, env))
+        elif isinstance(node, ast.AugAssign) and isinstance(node.target, ast.Name):
+            env.set(node.target.id, _UNKNOWN)
+        elif isinstance(node, ast.AnnAssign) and isinstance(node.target, ast.Name) \
+                and node.value is not None:
+            env.set(node.target.id, eval_const(node.value, env))
+    return env
+
+
+def collect_list_parts(name: str, call: ast.Call, func: ast.FunctionDef) -> Optional[list]:
+    """Element ASTs of a list variable at ``call``'s site, or None.
+
+    Understands the build-a-spec-list idiom::
+
+        specs = [A, B]
+        if cond:
+            specs.append(C)
+        specs += [D]
+
+    Conditional appends are *included* (superset — the conservative
+    direction for a VMEM upper bound).
+    """
+    parts = None
+    stop = call.lineno
+    for node in scope_nodes(func):
+        if getattr(node, "lineno", 0) >= stop:
+            continue
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and node.targets[0].id == name:
+            if isinstance(node.value, (ast.List, ast.Tuple)):
+                parts = list(node.value.elts)
+            else:
+                parts = None
+        elif isinstance(node, ast.AugAssign) and isinstance(node.target, ast.Name) \
+                and node.target.id == name and parts is not None:
+            if isinstance(node.value, (ast.List, ast.Tuple)):
+                parts.extend(node.value.elts)
+            else:
+                parts = None
+        elif isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute) \
+                and node.func.attr in ("append", "extend") \
+                and isinstance(node.func.value, ast.Name) \
+                and node.func.value.id == name and parts is not None:
+            if node.func.attr == "append" and len(node.args) == 1:
+                parts.append(node.args[0])
+            elif node.func.attr == "extend" and len(node.args) == 1 \
+                    and isinstance(node.args[0], (ast.List, ast.Tuple)):
+                parts.extend(node.args[0].elts)
+            else:
+                parts = None
+    return parts
+
+
+#: dtype name → byte width, for VMEM footprint arithmetic.
+DTYPE_BYTES = {
+    "float64": 8, "int64": 8, "uint64": 8,
+    "float32": 4, "int32": 4, "uint32": 4,
+    "bfloat16": 2, "float16": 2, "int16": 2, "uint16": 2,
+    "int8": 1, "uint8": 1, "bool_": 1, "bool": 1,
+    "float8_e4m3fn": 1, "float8_e5m2": 1,
+}
+
+
+def dtype_width(node: ast.AST, imports: ImportMap, default: int = 4) -> int:
+    """Byte width of a dtype expression (``jnp.float32`` → 4); ``default``
+    when the dtype is dynamic (``x.dtype``)."""
+    resolved = imports.resolve(node)
+    if resolved:
+        return DTYPE_BYTES.get(resolved.rsplit(".", 1)[-1], default)
+    return default

@@ -1,0 +1,117 @@
+"""Rule: literal collective axis names must be declared in the module.
+
+``jax.lax.psum(x, "dp")`` with no mesh/shard_map axis named ``"dp"``
+reachable from the call fails only at trace time — on a multi-device
+mesh, i.e. usually on hardware CI doesn't have. This rule checks every
+``psum`` / ``pmean`` / ``axis_index`` call whose axis argument is a
+string literal (or tuple of literals) against the axis names declared
+anywhere in the same module: ``make_mesh``/``abstract_mesh``/``Mesh``
+constructions, ``axis_name=``/``axis_names=``/``axes=`` keywords, and
+string-literal defaults of parameters named like an axis
+(``axis="stage"``). Variable axis arguments are out of static reach and
+are skipped.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Optional, Set
+
+from tools.palint.astutil import last_segment
+from tools.palint.engine import Context, Finding, PyModule, Rule, register
+
+_COLLECTIVES = {"psum": 1, "pmean": 1, "pmax": 1, "pmin": 1,
+                "axis_index": 0, "all_gather": 1, "ppermute": 1}
+_DECL_CALLS = {"make_mesh", "abstract_mesh", "Mesh", "AbstractMesh",
+               "mesh_for_pool", "data_stage_mesh"}
+_DECL_KWARGS = {"axis_name", "axis_names", "axes", "axis"}
+_AXIS_PARAM_NAMES = ("axis", "axes", "axis_name", "batch_axis", "dp_axis",
+                     "stage_axis", "model_axis")
+
+
+def _string_consts(node: ast.AST) -> Set[str]:
+    return {
+        n.value for n in ast.walk(node)
+        if isinstance(n, ast.Constant) and isinstance(n.value, str)
+    }
+
+
+def _declared_axes(module: PyModule) -> Set[str]:
+    declared: Set[str] = set()
+    for node in ast.walk(module.tree):
+        if isinstance(node, ast.Call):
+            if last_segment(module.imports.resolve(node.func)) in _DECL_CALLS:
+                for a in node.args:
+                    declared |= _string_consts(a)
+            for kw in node.keywords:
+                if kw.arg in _DECL_KWARGS:
+                    declared |= _string_consts(kw.value)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            args = node.args
+            pos = args.posonlyargs + args.args
+            pairs = list(zip(pos[len(pos) - len(args.defaults):], args.defaults))
+            pairs += [
+                (a, d) for a, d in zip(args.kwonlyargs, args.kw_defaults) if d
+            ]
+            for arg, default in pairs:
+                if arg.arg in _AXIS_PARAM_NAMES or arg.arg.endswith("_axis"):
+                    declared |= _string_consts(default)
+    return declared
+
+
+def _axis_literals(node: ast.AST) -> Optional[list]:
+    """["dp", ...] when the axis argument is fully literal, else None."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for e in node.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                out.append(e.value)
+            else:
+                return None
+        return out
+    return None
+
+
+@register
+class AxisNameRule(Rule):
+    name = "axis-name"
+    summary = ("psum/pmean/axis_index literal axis names must match a "
+               "mesh/shard_map axis declared in the module")
+
+    def check(self, module: PyModule, ctx: Context):
+        declared = None  # computed lazily — most modules have no collectives
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            resolved = module.imports.resolve(node.func) or ""
+            seg = last_segment(resolved)
+            if seg not in _COLLECTIVES or not (
+                resolved.startswith("jax.") or ".lax." in resolved
+            ):
+                continue
+            idx = _COLLECTIVES[seg]
+            axis_arg = None
+            if len(node.args) > idx:
+                axis_arg = node.args[idx]
+            else:
+                for kw in node.keywords:
+                    if kw.arg == "axis_name":
+                        axis_arg = kw.value
+            if axis_arg is None:
+                continue
+            literals = _axis_literals(axis_arg)
+            if literals is None:
+                continue  # dynamic axis — out of static reach
+            if declared is None:
+                declared = _declared_axes(module)
+            for name in literals:
+                if name not in declared:
+                    yield Finding(
+                        self.name, module.rel, node.lineno,
+                        f"{seg}(..., {name!r}): axis name {name!r} is not "
+                        "declared by any mesh/shard_map axis in this module "
+                        f"(declared: {sorted(declared) or 'none'})",
+                        col=node.col_offset,
+                    )

@@ -1,0 +1,90 @@
+"""Rule: committed ``BENCH_*.json`` records must carry the full schema.
+
+The benchmark JSONs are the repo's perf trajectory; a record missing
+``pallas_interpret_mode`` would let an interpret-mode number masquerade
+as a hardware measurement, and a stringly-typed step time silently
+breaks any script that plots the trend. Malformed records should fail
+CI at commit time, not skew an analysis months later.
+"""
+
+from __future__ import annotations
+
+import json
+
+from tools.palint.engine import Context, Finding, Rule, register
+
+#: top-level key → required json type(s)
+REQUIRED = {
+    "arch": str,
+    "backend": str,
+    "pallas_interpret_mode": bool,
+    "batch": int,
+    "seq": int,
+}
+
+#: nested keys matching any of these predicates must be numeric
+_NUMERIC_SUFFIXES = ("_ms", "_s", "_mb", "_bytes", "_bytes_per_batch")
+_NUMERIC_EXACT = {"ms", "batch", "seq", "bm", "bn", "bk", "bits", "steps"}
+_NUMERIC_PREFIXES = ("ratio_", "loss_")
+
+
+def _wants_numeric(key: str) -> bool:
+    return (key in _NUMERIC_EXACT or key.endswith(_NUMERIC_SUFFIXES)
+            or key.startswith(_NUMERIC_PREFIXES))
+
+
+def _walk(obj, path, out):
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            kp = f"{path}.{k}" if path else k
+            if _wants_numeric(k) and not (
+                isinstance(v, (int, float)) and not isinstance(v, bool)
+            ):
+                out.append((kp, v))
+            _walk(v, kp, out)
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            _walk(v, f"{path}[{i}]", out)
+
+
+@register
+class BenchSchemaRule(Rule):
+    name = "bench-schema"
+    summary = ("BENCH_*.json must have arch/backend/pallas_interpret_mode/"
+               "batch/seq and numeric step fields")
+    kind = "data"
+
+    def check_data(self, path: str, rel: str, raw: bytes, ctx: Context):
+        try:
+            data = json.loads(raw)
+        except (ValueError, UnicodeDecodeError) as e:
+            yield Finding(self.name, rel, 0, f"invalid JSON: {e}")
+            return
+        if not isinstance(data, dict):
+            yield Finding(self.name, rel, 0,
+                          "benchmark record must be a JSON object")
+            return
+        for key, typ in REQUIRED.items():
+            if key not in data:
+                yield Finding(
+                    self.name, rel, 0,
+                    f"missing required key {key!r} "
+                    f"({'bool' if typ is bool else typ.__name__})",
+                )
+            elif not isinstance(data[key], typ) or (
+                typ is int and isinstance(data[key], bool)
+            ):
+                yield Finding(
+                    self.name, rel, 0,
+                    f"key {key!r} must be "
+                    f"{'bool' if typ is bool else typ.__name__}, "
+                    f"got {type(data[key]).__name__} ({data[key]!r})",
+                )
+        bad_numeric = []
+        _walk(data, "", bad_numeric)
+        for kp, v in bad_numeric:
+            yield Finding(
+                self.name, rel, 0,
+                f"field {kp!r} must be numeric, got "
+                f"{type(v).__name__} ({v!r})",
+            )

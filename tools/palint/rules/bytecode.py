@@ -1,0 +1,39 @@
+"""Rule: no compiled-bytecode artifacts tracked in git.
+
+A committed ``__pycache__``/``.pyc`` is stale the moment the source
+changes and bloats every checkout; this replaces the CI
+``git ls-files | grep`` guard. Skips silently when the scan root is not
+a git work tree (e.g. fixture directories in the palint test suite).
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+
+from tools.palint.engine import Context, Finding, Rule, register
+
+
+@register
+class BytecodeRule(Rule):
+    name = "no-bytecode"
+    summary = "no __pycache__/ or .pyc files tracked in git"
+    kind = "project"
+
+    def check_project(self, ctx: Context):
+        if not os.path.isdir(os.path.join(ctx.root, ".git")):
+            return
+        try:
+            proc = subprocess.run(
+                ["git", "ls-files"], cwd=ctx.root, capture_output=True,
+                text=True, timeout=60, check=True,
+            )
+        except (OSError, subprocess.SubprocessError):
+            return  # no git available — the guard is CI-side anyway
+        for tracked in proc.stdout.splitlines():
+            if "__pycache__/" in tracked or tracked.endswith(".pyc"):
+                yield Finding(
+                    self.name, tracked, 0,
+                    "compiled bytecode is tracked in git — remove it and "
+                    "add the pattern to .gitignore",
+                )

@@ -1,0 +1,90 @@
+"""Rule: version-gated JAX APIs live in ``src/repro/compat.py`` only.
+
+The compat layer exists so exactly one module feature-detects the JAX
+surfaces that moved across releases (``shard_map``'s home, ``AxisType``,
+the ``check_rep``→``check_vma`` rename, ``make_mesh``'s ``axis_types=``
+kwarg). Any other use is a portability bug waiting for the next JAX
+pin bump. Matched on the AST — imports, attribute access, call keywords
+and ``getattr`` strings — so aliased or re-exported spellings that a
+text grep misses are still caught.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from tools.palint.engine import Context, Finding, PyModule, Rule, register
+
+ALLOWED = "src/repro/compat.py"
+_GATED_NAMES = {"AxisType", "check_vma"}
+_GATED_KWARGS = {"axis_types", "check_vma"}
+
+
+@register
+class CompatSurfaceRule(Rule):
+    name = "compat-surface"
+    summary = ("version-gated JAX APIs (shard_map import, AxisType, "
+               "check_vma, axis_types=) outside repro.compat")
+
+    def check(self, module: PyModule, ctx: Context):
+        if module.rel == ALLOWED:
+            return
+        for node in ast.walk(module.tree):
+            if isinstance(node, ast.ImportFrom) and node.module:
+                if "shard_map" in node.module or (
+                    node.module.split(".")[0] == "jax"
+                    and any(a.name == "shard_map" for a in node.names)
+                ):
+                    yield Finding(
+                        self.name, module.rel, node.lineno,
+                        "import shard_map via repro.compat.shard_map — its "
+                        "home moved across JAX versions",
+                    )
+                gated = _GATED_NAMES.intersection(a.name for a in node.names)
+                if node.module.split(".")[0] == "jax" and gated:
+                    yield Finding(
+                        self.name, module.rel, node.lineno,
+                        f"import of version-gated {sorted(gated)} — only "
+                        "repro.compat may touch these",
+                    )
+            elif isinstance(node, ast.Import):
+                for a in node.names:
+                    if "shard_map" in a.name:
+                        yield Finding(
+                            self.name, module.rel, node.lineno,
+                            "import shard_map via repro.compat.shard_map",
+                        )
+            elif isinstance(node, ast.Attribute):
+                resolved = module.imports.resolve(node)
+                if resolved == "jax.shard_map":
+                    yield Finding(
+                        self.name, module.rel, node.lineno,
+                        "jax.shard_map moved across versions — use "
+                        "repro.compat.shard_map",
+                        col=node.col_offset,
+                    )
+                elif node.attr in _GATED_NAMES:
+                    yield Finding(
+                        self.name, module.rel, node.lineno,
+                        f"attribute .{node.attr} is version-gated — only "
+                        "repro.compat may feature-detect it",
+                        col=node.col_offset,
+                    )
+            elif isinstance(node, ast.Call):
+                for kw in node.keywords:
+                    if kw.arg in _GATED_KWARGS:
+                        yield Finding(
+                            self.name, module.rel, node.lineno,
+                            f"keyword {kw.arg}= is version-gated — route "
+                            "through repro.compat",
+                            col=node.col_offset,
+                        )
+                if isinstance(node.func, ast.Name) and node.func.id == "getattr":
+                    for a in node.args:
+                        if isinstance(a, ast.Constant) and a.value in _GATED_NAMES:
+                            yield Finding(
+                                self.name, module.rel, node.lineno,
+                                f"getattr(..., {a.value!r}) feature-detects a "
+                                "version-gated API outside repro.compat",
+                                col=node.col_offset,
+                            )

@@ -1,0 +1,141 @@
+"""Rule: no host-side effects lexically inside traced function bodies.
+
+Functions that are jitted, shard_mapped, or handed to ``pallas_call``
+run at *trace time*: a ``time.perf_counter()`` measures tracing (once),
+a ``print`` fires once per compilation, ``np.random`` bakes one sample
+into the compiled program, and module-global mutation silently captures
+stale state. All are classic "works in eager, wrong under jit" bugs.
+``jax.debug.print`` / ``jax.debug.callback`` are the sanctioned
+alternatives and are not flagged.
+
+Detection is lexical: a function counts as traced when it is decorated
+with ``jax.jit`` (directly or via ``functools.partial(jax.jit, ...)``),
+or passed as the first argument to ``jit`` / ``shard_map`` /
+``pallas_call`` (lambdas and local ``def``s both resolve). Everything
+lexically inside — nested defs included — is checked.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Set
+
+from tools.palint.astutil import last_segment
+from tools.palint.engine import Context, Finding, PyModule, Rule, register
+
+_WRAPPER_SEGMENTS = {"jit", "shard_map", "pallas_call"}
+_IMPURE_EXACT = {
+    "time.time", "time.perf_counter", "time.monotonic", "time.process_time",
+    "time.time_ns", "time.perf_counter_ns",
+}
+_IMPURE_PREFIXES = ("numpy.random.",)
+
+
+def _is_wrapper(resolved) -> bool:
+    return last_segment(resolved) in _WRAPPER_SEGMENTS
+
+
+def _unwrap_partial(node: ast.AST, module: PyModule):
+    """``functools.partial(f, ...)`` → ``f`` (recursively); else ``node``."""
+    while isinstance(node, ast.Call) \
+            and last_segment(module.imports.resolve(node.func)) == "partial" \
+            and node.args:
+        node = node.args[0]
+    return node
+
+
+def _traced_functions(module: PyModule) -> Iterator:
+    """(func_node, reason) for every lexically-traced function body."""
+    defs_by_name = {}
+    assigned = {}
+    for node in ast.walk(module.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs_by_name.setdefault(node.name, node)
+        elif isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            assigned.setdefault(node.targets[0].id, []).append(node.value)
+
+    seen: Set[int] = set()
+
+    def mark(target: ast.AST, reason: str, depth: int = 0):
+        target = _unwrap_partial(target, module)
+        if isinstance(target, ast.Name):
+            resolved = defs_by_name.get(target.id)
+            if resolved is None and depth < 4:
+                # `kernel = functools.partial(_kernel, ...)` then
+                # `pallas_call(kernel, ...)` — chase every assignment to
+                # the name (several scopes may reuse it; each candidate
+                # really is traced somewhere)
+                for value in assigned.get(target.id, ()):
+                    yield from mark(value, reason, depth + 1)
+                return
+            target = resolved
+        if isinstance(target, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)) \
+                and id(target) not in seen:
+            seen.add(id(target))
+            yield target, reason
+
+    for node in ast.walk(module.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                target = dec
+                if isinstance(dec, ast.Call):  # partial(jax.jit, ...) / jit(...)
+                    inner = _unwrap_partial(dec, module)
+                    if inner is not dec:
+                        target = inner  # partial's first arg must be the wrapper
+                        if _is_wrapper(module.imports.resolve(target)):
+                            yield from mark(node, last_segment(
+                                module.imports.resolve(target)))
+                        continue
+                    target = dec.func
+                if _is_wrapper(module.imports.resolve(target)):
+                    yield from mark(node, last_segment(module.imports.resolve(target)))
+        elif isinstance(node, ast.Call):
+            if _is_wrapper(module.imports.resolve(node.func)) and node.args:
+                yield from mark(
+                    node.args[0], last_segment(module.imports.resolve(node.func))
+                )
+
+
+@register
+class JitPurityRule(Rule):
+    name = "jit-purity"
+    summary = ("time/print/np.random/global-mutation inside jit, shard_map "
+               "or pallas_call bodies")
+
+    def check(self, module: PyModule, ctx: Context):
+        flagged: List[Finding] = []
+        reported: Set[int] = set()
+        for func, reason in _traced_functions(module):
+            label = getattr(func, "name", "<lambda>")
+            for node in ast.walk(func):
+                if id(node) in reported:
+                    continue
+                if isinstance(node, ast.Global):
+                    reported.add(id(node))
+                    flagged.append(Finding(
+                        self.name, module.rel, node.lineno,
+                        f"global-statement mutation inside {reason}-traced "
+                        f"'{label}' — traced code must not mutate module state",
+                    ))
+                elif isinstance(node, ast.Call):
+                    resolved = module.imports.resolve(node.func) or ""
+                    bad = None
+                    if resolved == "print":
+                        bad = ("print() runs at trace time — use "
+                               "jax.debug.print for traced values")
+                    elif resolved in _IMPURE_EXACT:
+                        bad = (f"{resolved}() measures tracing, not the "
+                               "compiled step — time outside the traced body")
+                    elif resolved.startswith(_IMPURE_PREFIXES):
+                        bad = (f"{resolved}() bakes one host sample into the "
+                               "compiled program — use jax.random with a "
+                               "traced key")
+                    if bad:
+                        reported.add(id(node))
+                        flagged.append(Finding(
+                            self.name, module.rel, node.lineno,
+                            f"{bad} (inside {reason}-traced '{label}')",
+                            col=node.col_offset,
+                        ))
+        yield from flagged

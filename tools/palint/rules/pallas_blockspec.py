@@ -1,0 +1,309 @@
+"""Rule: static sanity + VMEM budgeting for every ``pallas_call`` site.
+
+A bad ``BlockSpec`` fails at *Mosaic compile time on a TPU* — hardware
+the CPU-only CI never touches (every committed benchmark is
+interpret-mode, which skips these checks entirely). This rule moves
+three classes of kernel-launch bugs to lint time:
+
+* **index_map arity** — each BlockSpec's ``index_map`` lambda must take
+  exactly one argument per grid dimension.
+* **divisibility** — where a block dim and the corresponding output
+  array dim are both statically known, the block must divide the
+  (padded) dim; Pallas would otherwise round-and-clip silently in
+  interpret mode and miscompile on hardware.
+* **VMEM footprint** — the summed per-grid-step footprint of all
+  in/out blocks (×2: the pipeline emitter double-buffers them) plus
+  scratch must fit the per-core VMEM budget (default 16 MiB — the TPU
+  figure from the Pallas guide).
+
+Block shapes are resolved by constant propagation over the enclosing
+function (parameter defaults, ``min``-clamps, straight-line
+assignments). Dims that stay dynamic (e.g. a head dim unpacked from a
+runtime shape) are charged a configurable assumption (default 128,
+``--assume-dim``) and the estimate is marked inexact — every site still
+gets a VMEM report in ``--json``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from tools.palint.astutil import (
+    ConstEnv,
+    build_env_for,
+    collect_list_parts,
+    dtype_width,
+    eval_const,
+    last_segment,
+    module_env,
+)
+from tools.palint.engine import Context, Finding, PyModule, Report, Rule, register
+
+_OFF_VMEM_SPACES = {"SMEM", "HBM", "ANY", "SEMAPHORE"}
+
+
+class _Spec:
+    """One parsed BlockSpec (or scratch shape)."""
+
+    def __init__(self):
+        self.dims: List[Optional[float]] = []
+        self.dim_nodes: List[ast.AST] = []
+        self.exact = True
+        self.assumed: List[str] = []
+        self.arity: Optional[int] = None
+        self.memory_space: Optional[str] = None
+        self.width = 4
+        self.known_shape = False
+
+    def resolve_dims(self, elts, env: ConstEnv, assume: int):
+        self.known_shape = True
+        for e in elts:
+            v, exact = eval_const(e, env)
+            if v is None:
+                try:
+                    label = ast.unparse(e)[:40]
+                except Exception:
+                    label = "<expr>"
+                self.assumed.append(label)
+                v, exact = assume, False
+            self.dims.append(v)
+            self.dim_nodes.append(e)
+            self.exact = self.exact and exact
+
+    @property
+    def bytes(self) -> int:
+        if not self.known_shape:
+            return 0
+        n = 1
+        for d in self.dims:
+            n *= max(int(d), 1)
+        return int(n * self.width)
+
+
+def _parse_blockspec(node: ast.AST, module: PyModule, env: ConstEnv,
+                     assume: int) -> Optional[_Spec]:
+    if not (isinstance(node, ast.Call)
+            and last_segment(module.imports.resolve(node.func)) == "BlockSpec"):
+        return None
+    spec = _Spec()
+    shape = node.args[0] if node.args else None
+    index_map = node.args[1] if len(node.args) > 1 else None
+    for kw in node.keywords:
+        if kw.arg == "block_shape":
+            shape = kw.value
+        elif kw.arg == "index_map":
+            index_map = kw.value
+        elif kw.arg == "memory_space":
+            spec.memory_space = last_segment(module.imports.resolve(kw.value))
+    if isinstance(shape, (ast.Tuple, ast.List)):
+        spec.resolve_dims(shape.elts, env, assume)
+    if isinstance(index_map, ast.Lambda):
+        spec.arity = len(index_map.args.args) + len(index_map.args.posonlyargs)
+    return spec
+
+
+def _spec_list(node: Optional[ast.AST], module: PyModule,
+               call: ast.Call, func) -> Optional[List[ast.AST]]:
+    """The BlockSpec element ASTs behind an ``in_specs=``-style argument."""
+    if node is None:
+        return []
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return list(node.elts)
+    if isinstance(node, ast.Name) and func is not None:
+        return collect_list_parts(node.id, call, func)
+    return [node]  # single spec
+
+
+def _out_dtypes_and_dims(node: Optional[ast.AST], module: PyModule,
+                         env: ConstEnv):
+    """[(width, [dim exprs])] per output, from ``out_shape=``."""
+    outs = []
+    if node is None:
+        return outs
+    structs = node.elts if isinstance(node, (ast.Tuple, ast.List)) else [node]
+    for s in structs:
+        width, dims = 4, None
+        if isinstance(s, ast.Call) and last_segment(
+                module.imports.resolve(s.func)) == "ShapeDtypeStruct":
+            shape = s.args[0] if s.args else None
+            dtype = s.args[1] if len(s.args) > 1 else None
+            for kw in s.keywords:
+                if kw.arg == "shape":
+                    shape = kw.value
+                elif kw.arg == "dtype":
+                    dtype = kw.value
+            if dtype is not None:
+                width = dtype_width(dtype, module.imports)
+            if isinstance(shape, (ast.Tuple, ast.List)):
+                dims = shape.elts
+        outs.append((width, dims))
+    return outs
+
+
+def _kernel_label(node: ast.AST, module: PyModule) -> str:
+    while isinstance(node, ast.Call) and last_segment(
+            module.imports.resolve(node.func)) == "partial" and node.args:
+        node = node.args[0]
+    if isinstance(node, ast.Lambda):
+        return "<lambda>"
+    return last_segment(module.imports.resolve(node)) or "<kernel>"
+
+
+def _enclosing_function(module: PyModule, call: ast.Call):
+    best = None
+    for node in ast.walk(module.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if node.lineno <= call.lineno <= max(
+                getattr(node, "end_lineno", node.lineno), node.lineno
+            ):
+                if best is None or node.lineno > best.lineno:
+                    best = node
+    return best
+
+
+@register
+class PallasBlockSpecRule(Rule):
+    name = "pallas-blockspec"
+    summary = ("pallas_call: index_map arity vs grid rank, literal block "
+               "divisibility, per-site VMEM budget")
+
+    def check(self, module: PyModule, ctx: Context):
+        base = None
+        for call in ast.walk(module.tree):
+            if not (isinstance(call, ast.Call) and last_segment(
+                    module.imports.resolve(call.func)) == "pallas_call"):
+                continue
+            if base is None:
+                base = module_env(module.tree)
+            yield from self._check_site(module, ctx, call, base)
+
+    def _check_site(self, module: PyModule, ctx: Context, call: ast.Call,
+                    base: ConstEnv):
+        func = _enclosing_function(module, call)
+        env = build_env_for(call, func, base) if func is not None else base
+        assume = ctx.assume_dim
+
+        kwargs = {kw.arg: kw.value for kw in call.keywords if kw.arg}
+        grid_node = kwargs.get("grid")
+        grid_rank: Optional[int] = None
+        grid_dims: List[Optional[float]] = []
+        if isinstance(grid_node, (ast.Tuple, ast.List)):
+            grid_rank = len(grid_node.elts)
+            grid_dims = [eval_const(e, env)[0] for e in grid_node.elts]
+        elif grid_node is not None:
+            grid_rank = 1
+            grid_dims = [eval_const(grid_node, env)[0]]
+
+        out_shape_node = kwargs.get("out_shape")
+        if out_shape_node is None and len(call.args) > 1:
+            out_shape_node = call.args[1]
+        out_meta = _out_dtypes_and_dims(out_shape_node, module, env)
+
+        in_nodes = _spec_list(kwargs.get("in_specs"), module, call, func)
+        out_nodes = _spec_list(kwargs.get("out_specs"), module, call, func)
+        unresolved_lists = in_nodes is None or out_nodes is None
+
+        specs = []  # (role, index, _Spec)
+        for role, nodes in (("in", in_nodes or []), ("out", out_nodes or [])):
+            for i, n in enumerate(nodes):
+                s = _parse_blockspec(n, module, env, assume)
+                if s is not None:
+                    if role == "out" and i < len(out_meta):
+                        s.width = out_meta[i][0]
+                    specs.append((role, i, s))
+
+        # -- index_map arity vs grid rank ---------------------------------
+        if grid_rank is not None:
+            for role, i, s in specs:
+                if s.arity is not None and s.arity != grid_rank:
+                    yield Finding(
+                        self.name, module.rel, call.lineno,
+                        f"{role}_specs[{i}]: index_map takes {s.arity} "
+                        f"argument(s) but the grid has rank {grid_rank} — "
+                        "Pallas passes one program id per grid dim",
+                        col=call.col_offset,
+                    )
+
+        # -- literal divisibility of out blocks into out dims --------------
+        for role, i, s in specs:
+            if role != "out" or i >= len(out_meta) or not s.known_shape:
+                continue
+            _, arr_dims = out_meta[i]
+            if arr_dims is None or len(arr_dims) != len(s.dims):
+                continue
+            for d, (blk_node, arr_node) in enumerate(
+                    zip(s.dim_nodes, arr_dims)):
+                bv, bexact = eval_const(blk_node, env)
+                av, aexact = eval_const(arr_node, env)
+                if bexact and aexact and bv and av and int(av) % int(bv):
+                    yield Finding(
+                        self.name, module.rel, call.lineno,
+                        f"out_specs[{i}] dim {d}: block size {int(bv)} does "
+                        f"not divide the output dim {int(av)} — pad the "
+                        "operand or pick an aligning block",
+                        col=call.col_offset,
+                    )
+
+        # -- VMEM footprint -------------------------------------------------
+        total = 0
+        exact = not unresolved_lists
+        assumed: List[str] = []
+        n_skipped = 0
+        for role, i, s in specs:
+            if s.memory_space in _OFF_VMEM_SPACES:
+                continue
+            if not s.known_shape:
+                n_skipped += 1
+                exact = False
+                continue
+            total += s.bytes * 2  # pipeline double-buffering
+            exact = exact and s.exact
+            assumed += s.assumed
+
+        scratch_nodes = _spec_list(kwargs.get("scratch_shapes"), module,
+                                   call, func) or []
+        n_scratch = 0
+        for n in scratch_nodes:
+            if not isinstance(n, ast.Call):
+                continue
+            seg = last_segment(module.imports.resolve(n.func))
+            if seg != "VMEM":
+                continue
+            n_scratch += 1
+            s = _Spec()
+            if n.args and isinstance(n.args[0], (ast.Tuple, ast.List)):
+                s.resolve_dims(n.args[0].elts, env, assume)
+            if len(n.args) > 1:
+                s.width = dtype_width(n.args[1], module.imports)
+            total += s.bytes
+            exact = exact and s.exact
+            assumed += s.assumed
+
+        budget = ctx.vmem_budget_bytes
+        data = {
+            "kernel": _kernel_label(call.args[0], module) if call.args
+            else "<kernel>",
+            "grid_rank": grid_rank,
+            "grid": [int(g) if g is not None else None for g in grid_dims],
+            "n_in_specs": len(in_nodes) if in_nodes is not None else None,
+            "n_out_specs": len(out_nodes) if out_nodes is not None else None,
+            "n_scratch": n_scratch,
+            "vmem_bytes": total,
+            "vmem_kib": round(total / 1024, 1),
+            "budget_bytes": budget,
+            "exact": exact,
+            "assumed_dims": sorted(set(assumed)),
+            "unparsed_specs": n_skipped,
+            "double_buffered": True,
+        }
+        yield Report(self.name, module.rel, call.lineno, data)
+        if total > budget:
+            yield Finding(
+                self.name, module.rel, call.lineno,
+                f"estimated per-step VMEM footprint {total / 2**20:.1f} MiB "
+                f"exceeds the {budget / 2**20:.1f} MiB budget "
+                f"({'exact' if exact else 'estimate; assumed dims: ' + str(sorted(set(assumed)))}) "
+                "— shrink the block sizes or raise --vmem-budget-mib",
+                col=call.col_offset,
+            )

@@ -1,0 +1,84 @@
+"""Rule: storage-form cache entries decompress only where sanctioned.
+
+The PR 5/7 contract: an int8 activation-cache entry (the
+``{"q": int8, "scale": f32}`` dict) crosses host→device and HBM at its
+*storage* width and is dequantised tile-wise in VMEM by the kernels.
+An eager ``entry["q"].astype(f32)`` / ``dequantize(entry[...])`` /
+``entry_to_f32(...)`` anywhere else re-materialises the full f32 tap —
+exactly the round-trip the fused path exists to avoid — and shows up as
+a silent 4× traffic regression, not a test failure.
+
+Sanctioned sites: ``src/repro/kernels/`` (the kernels themselves and
+their ref oracle), ``src/repro/core/activation_cache.py`` (the cache
+owns its entries' lifecycle) and ``src/repro/core/quantization.py``
+(defines the primitives).
+"""
+
+from __future__ import annotations
+
+import ast
+
+from tools.palint.astutil import last_segment
+from tools.palint.engine import Context, Finding, PyModule, Rule, register
+
+ALLOWED_PREFIXES = (
+    "src/repro/kernels/",
+    "src/repro/core/activation_cache.py",
+    "src/repro/core/quantization.py",
+)
+_KEYS = {"q", "scale"}
+
+
+def _touches_storage_key(node: ast.AST) -> bool:
+    """True when the expression subtree subscripts a ``"q"``/``"scale"``
+    storage-form entry."""
+    for n in ast.walk(node):
+        if isinstance(n, ast.Subscript):
+            sl = n.slice
+            if isinstance(sl, ast.Constant) and sl.value in _KEYS:
+                return True
+    return False
+
+
+@register
+class StorageFormRule(Rule):
+    name = "storage-form"
+    summary = ("eager f32 decompression of {'q','scale'} cache entries "
+               "outside kernels/ and the activation cache")
+
+    def check(self, module: PyModule, ctx: Context):
+        if module.rel.startswith(ALLOWED_PREFIXES):
+            return
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            seg = last_segment(module.imports.resolve(node.func))
+            if seg == "entry_to_f32":
+                yield Finding(
+                    self.name, module.rel, node.lineno,
+                    "entry_to_f32() eagerly decompresses a storage-form "
+                    "cache entry — outside kernels/ this re-materialises "
+                    "the full f32 tap (use the fused dq_* kernels)",
+                    col=node.col_offset,
+                )
+            elif seg == "dequantize" and any(
+                _touches_storage_key(a) for a in list(node.args)
+                + [kw.value for kw in node.keywords]
+            ):
+                yield Finding(
+                    self.name, module.rel, node.lineno,
+                    "dequantize() of a {'q','scale'} storage-form entry — "
+                    "the no-f32-round-trip contract confines this to "
+                    "kernels/ and the activation cache",
+                    col=node.col_offset,
+                )
+            elif isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "astype" \
+                    and _touches_storage_key(node.func.value):
+                yield Finding(
+                    self.name, module.rel, node.lineno,
+                    "entry['q'].astype(...) eagerly upcasts a storage-form "
+                    "payload — taps must stay at storage width outside "
+                    "kernels/ and the activation cache",
+                    col=node.col_offset,
+                )
