@@ -1,0 +1,120 @@
+"""Serving decode-step benchmark: ref vs Pallas paged attention, per KV
+page policy — writes ``BENCH_decode_step.json``.
+
+One continuous-batching decode step (`repro.serve.decode.
+paged_pac_decode_step`: B requests × B adapters against the shared KV
+page pool) is timed with ``kernel_impl="ref"`` (gather-then-dense
+oracle) and ``"pallas"`` (page-walking kernel, in-VMEM INT8 dequant) for
+each KV storage policy, and the per-token serving KV footprint is
+recorded alongside (``kv_bytes_per_token`` — the number the paged INT8
+cache exists to shrink). Off-TPU the Pallas column runs the interpreter
+— a correctness/traffic datapoint, not a speed claim; the
+``pallas_interpret_mode`` flag in the JSON says which it was.
+
+    PYTHONPATH=src python -m benchmarks.bench_decode [--quick]
+"""
+
+import argparse
+import functools
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.configs import get_arch
+from repro.core.parallel_adapters import (
+    gather_adapters,
+    init_adapter,
+    stack_adapters,
+)
+from repro.core.quantization import quantize_tree
+from repro.kernels.cached_step import _auto_interpret
+from repro.models import backbone as bb
+from repro.serve import paging
+from repro.serve.decode import paged_pac_decode_step, paged_prefill
+
+
+def main(arch="internlm2-1.8b", B=4, S=24, page=8, quick=False,
+         out_json="BENCH_decode_step.json") -> list:
+    cfg = get_arch(arch).reduced()
+    backbone = quantize_tree(
+        bb.init_backbone(jax.random.PRNGKey(0), cfg), bits=8, min_size=1024)
+    # two distinct adapters shared across the batch — the multi-tenant shape
+    bank = stack_adapters([
+        init_adapter(jax.random.PRNGKey(1), cfg, r=8),
+        init_adapter(jax.random.PRNGKey(2), cfg, r=8),
+    ])
+    abatch = gather_adapters(bank, jnp.arange(B) % 2)
+    max_len = S + page  # headroom for the timed decode token
+    max_pages = -(-max_len // page)
+    n_pages = B * max_pages + 1
+    prompt = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0, cfg.vocab)
+    tok = jnp.full((B, 1), 7, jnp.int32)
+    iters = 2 if quick else 5
+    out, results = [], {}
+
+    for policy in ("f32", "bf16", "int8"):
+        pools = paging.init_pools(cfg, n_pages, page, B, policy)
+        alloc = paging.PageAllocator(n_pages)
+        table = paging.PageTable(alloc, page, max_pages)
+        for i in range(B):
+            table.open(i, S)
+        bt0, lens0 = table.dense(range(B))
+        _, pools, acache = paged_prefill(
+            backbone, abatch, prompt, jnp.asarray(lens0), pools,
+            jnp.asarray(bt0), cfg=cfg, max_len=max_len, r=8)
+        for i in range(B):
+            table.extend_to(i, S + 1)
+        bt, lengths = table.dense(range(B))
+        bt, lengths = jnp.asarray(bt), jnp.asarray(lengths)
+        rec = {
+            "kv_bytes_per_token": paging.kv_bytes_per_token(cfg, policy),
+            "pool_mb": round(sum(
+                t.size * t.dtype.itemsize for t in jax.tree.leaves(pools)
+            ) / 2**20, 3),
+        }
+        logits = {}
+        for impl in ("ref", "pallas"):
+            step = jax.jit(functools.partial(
+                paged_pac_decode_step, cfg=cfg, r=8, kernel_impl=impl))
+            t = timeit(step, backbone, abatch, tok, pools, bt, lengths,
+                       acache, iters=iters)
+            logits[impl] = np.asarray(
+                step(backbone, abatch, tok, pools, bt, lengths, acache)[0])
+            rec[f"{impl}_ms"] = round(t * 1e3, 3)
+            rec[f"{impl}_tokens_per_s"] = round(B / t, 2)
+        rec["ratio_pallas_over_ref"] = round(rec["pallas_ms"] / rec["ref_ms"], 3)
+        rec["logits_abs_diff"] = float(
+            np.max(np.abs(logits["ref"] - logits["pallas"])))
+        results[policy] = rec
+        out.append(row(
+            f"decode_step_{policy}", rec["pallas_ms"] * 1e3 / B,
+            f"ref_ms={rec['ref_ms']};pallas_ms={rec['pallas_ms']};"
+            f"kv_bytes_per_token={rec['kv_bytes_per_token']};"
+            f"logits_diff={rec['logits_abs_diff']:.2e}",
+        ))
+
+    payload = {
+        "arch": cfg.name, "batch": B, "seq": S, "page_size": page,
+        "backend": jax.default_backend(),
+        "pallas_interpret_mode": _auto_interpret(None),
+        "policies": results,
+    }
+    with open(out_json, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    print(f"wrote {out_json}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=24)
+    ap.add_argument("--page", type=int, default=8)
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer timing iters (CI smoke)")
+    a = ap.parse_args()
+    main(arch=a.arch, B=a.batch, S=a.seq, page=a.page, quick=a.quick)

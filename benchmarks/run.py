@@ -22,6 +22,7 @@ BENCHES = [
     ("fig16_scalability", "benchmarks.bench_scalability"),
     ("fig12_heterogeneous", "benchmarks.bench_heterogeneous"),
     ("roofline", "benchmarks.roofline_table"),
+    ("serve_decode", "benchmarks.bench_decode"),
 ]
 
 

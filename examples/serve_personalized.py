@@ -1,15 +1,23 @@
-"""Serve a PAC+-personalised model: batched greedy decoding through the
-frozen (quantized) backbone + fine-tuned side network.
+"""Serve PAC+-personalised models through the multi-tenant engine: one
+frozen (quantized) backbone, one fine-tuned side network *per user*, all
+requests sharing a paged INT8 KV pool with continuous batching
+(`repro.serve.ServeEngine`).
+
+Each submitted request names its adapter — one decode step serves the
+whole batch with per-request adapters gathered from the resident bank.
+Prompts are ingested by a single batched prefill (all-attention archs)
+or the stepwise fallback (SSM/hybrid archs), never the old
+token-by-token teacher-forcing loop; the engine's greedy output at f32
+KV is checked byte-for-byte against that legacy loop below.
 
 ``--kernels pallas`` routes the frozen decode through the pallas OpSet
-(`repro.core.opset`): the QKV/MLP projections consume the still-quantized
-INT8 weights via `quant_matmul` instead of dequantize-then-dense (the
-side network and LM head stay on the ref ops — they are the trainable/fp
-math). Off-TPU the kernels run in interpreter mode: a correctness demo,
-not a speed claim.
+(`repro.core.opset`): quantized projections in `quant_matmul`, the paged
+Pallas attention kernel walking the page tables. Off-TPU the kernels run
+in interpreter mode: a correctness demo, not a speed claim.
 
     PYTHONPATH=src python examples/serve_personalized.py \
-        [--arch xlstm-125m] [--tokens 24] [--kernels ref|pallas]
+        [--arch internlm2-1.8b] [--tokens 24] [--kernels ref|pallas] \
+        [--kv int8|bf16|f32] [--users 3]
 """
 
 import argparse
@@ -24,46 +32,94 @@ from repro.core import steps
 from repro.core.parallel_adapters import init_adapter, init_adapter_cache
 from repro.core.quantization import quantize_tree
 from repro.models import backbone as bb
+from repro.serve import ServeEngine
+
+PROMPT_LEN = 8
+
+
+def legacy_greedy_loop(backbone, adapter, cfg, prompt, n_new, max_len, kernels):
+    """The pre-engine serving loop: every prompt token teacher-forced
+    through `pac_decode_step`, one request per run — the byte-stability
+    reference for the engine's f32-KV output."""
+    cache = bb.init_cache(cfg, 1, max_len)
+    acache = init_adapter_cache(cfg, 1, max_len, r=8)
+    step = jax.jit(functools.partial(
+        steps.pac_decode_step, cfg=cfg, r=8, kernel_impl=kernels))
+    tok = jnp.asarray([[prompt[0]]], jnp.int32)
+    out = []
+    for t in range(len(prompt) + n_new - 1):
+        logits, cache, acache = step(
+            backbone, adapter, {"tokens": tok}, cache, acache, jnp.int32(t))
+        if t + 1 < len(prompt):
+            tok = jnp.asarray([[prompt[t + 1]]], jnp.int32)
+        else:
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            out.append(int(tok[0, 0]))
+    return out
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--arch", default="xlstm-125m")
+    ap.add_argument("--arch", default="internlm2-1.8b")
     ap.add_argument("--tokens", type=int, default=24, help="tokens to generate")
     ap.add_argument("--kernels", default="ref", choices=["ref", "pallas"],
                     help="OpSet for the frozen backbone decode")
+    ap.add_argument("--kv", default="int8", choices=["int8", "bf16", "f32"],
+                    help="KV page storage policy")
+    ap.add_argument("--users", type=int, default=3)
     args = ap.parse_args()
 
     cfg = get_arch(args.arch).reduced()
-    backbone = quantize_tree(bb.init_backbone(jax.random.PRNGKey(0), cfg), bits=8, min_size=1024)
-    adapter = init_adapter(jax.random.PRNGKey(1), cfg, r=8)
+    backbone = quantize_tree(
+        bb.init_backbone(jax.random.PRNGKey(0), cfg), bits=8, min_size=1024)
+    adapters = {
+        f"user{u}": init_adapter(jax.random.PRNGKey(1 + u), cfg, r=8)
+        for u in range(args.users)
+    }
+    max_len = PROMPT_LEN + args.tokens
+    engine_kw = dict(
+        r=8, kernel_impl=args.kernels, page_size=8, max_len=max_len,
+        max_batch=max(4, args.users),
+    )
+    engine = ServeEngine(backbone, cfg, adapters, kv_policy=args.kv, **engine_kw)
 
-    B, MAXLEN = 4, 64
-    cache = bb.init_cache(cfg, B, MAXLEN)
-    acache = init_adapter_cache(cfg, B, MAXLEN, r=8)
-    step = jax.jit(functools.partial(
-        steps.pac_decode_step, cfg=cfg, r=8, kernel_impl=args.kernels))
-
-    prompt = jax.random.randint(jax.random.PRNGKey(2), (B, 8), 0, cfg.vocab)
-    tok = prompt[:, :1]
-    out_tokens = []
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(2), (args.users, PROMPT_LEN), 0, cfg.vocab).tolist()
     t0 = time.perf_counter()
-    for t in range(prompt.shape[1] + args.tokens):
-        if cfg.frontend:
-            inp = {"embeds": jnp.zeros((B, 1, cfg.d_model))}
-        else:
-            inp = {"tokens": tok}
-        logits, cache, acache = step(backbone, adapter, inp, cache, acache, jnp.int32(t))
-        if t + 1 < prompt.shape[1]:
-            tok = prompt[:, t + 1 : t + 2]  # teacher-force the prompt
-        else:
-            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            out_tokens.append(tok)
+    handles = [
+        engine.submit(prompts[u], f"user{u}", max_new_tokens=args.tokens)
+        for u in range(args.users)
+    ]
+    engine.drain()
     dt = time.perf_counter() - t0
-    gen = jnp.concatenate(out_tokens, axis=1)
-    print(f"arch={cfg.name} batch={B} kernels={args.kernels}: generated "
-          f"{gen.shape[1]} tokens/seq in {dt:.2f}s ({B * gen.shape[1] / dt:.1f} tok/s)")
-    print("sample:", gen[0][:16].tolist())
+    results = [h.result() for h in handles]
+    n_gen = sum(len(r) for r in results)
+    print(f"arch={cfg.name} users={args.users} kernels={args.kernels} "
+          f"kv={args.kv} prefill={engine.prefill_mode}: generated {n_gen} "
+          f"tokens in {dt:.2f}s ({n_gen / dt:.1f} tok/s)")
+    for u, r in enumerate(results):
+        print(f"  user{u}: {r[:12]}")
+
+    # byte-stability gate: the engine at f32 KV must reproduce the legacy
+    # teacher-forcing loop's greedy tokens exactly, user by user
+    eng_f32 = (engine if args.kv == "f32"
+               else ServeEngine(backbone, cfg, adapters, kv_policy="f32", **engine_kw))
+    if args.kv != "f32":
+        hs = [eng_f32.submit(prompts[u], f"user{u}", max_new_tokens=args.tokens)
+              for u in range(args.users)]
+        eng_f32.drain()
+        results_f32 = [h.result() for h in hs]
+    else:
+        results_f32 = results
+    for u in range(args.users):
+        legacy = legacy_greedy_loop(
+            backbone, adapters[f"user{u}"], cfg, prompts[u], args.tokens,
+            max_len, args.kernels)
+        assert results_f32[u] == legacy, (
+            f"user{u}: engine f32 output diverged from the legacy loop:\n"
+            f"  engine: {results_f32[u]}\n  legacy: {legacy}")
+    print(f"engine(f32 KV) == legacy teacher-forcing loop for all "
+          f"{args.users} users: ok")
 
 
 if __name__ == "__main__":

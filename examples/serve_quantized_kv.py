@@ -1,11 +1,17 @@
-"""Serve with the fully-quantized memory stack: INT8 backbone weights
-(paper Eq. 1) + INT8 KV cache (beyond-paper, EXPERIMENTS §Beyond-paper)
-vs the f32 baseline — prints the cache/weight bytes and verifies the
-generated tokens agree.
+"""Serve with the fully-quantized memory stack through the paged engine:
+INT8 backbone weights (paper Eq. 1) + paged INT8 KV (beyond-paper,
+EXPERIMENTS §Beyond-paper) vs the f32-paged baseline — prints weight /
+KV-pool bytes and the per-token KV footprint, and verifies the greedy
+streams agree.
 
-``--kernels pallas`` additionally runs the quantized leg's decode
-through the pallas OpSet (still-quantized projections in `quant_matmul`;
-interpret mode off-TPU).
+Both legs run `repro.serve.ServeEngine` (one batched prefill + paged
+continuous-batching decode; no adapters — the bare backbone). The f32
+leg is additionally checked byte-for-byte against the legacy
+token-by-token `decode_step` loop it replaced.
+
+``--kernels pallas`` runs the decode through the pallas OpSet: quantized
+projections in `quant_matmul`, the paged Pallas attention kernel
+dequantizing INT8 pages in VMEM (interpret mode off-TPU).
 
     PYTHONPATH=src python examples/serve_quantized_kv.py \
         [--arch internlm2-1.8b] [--tokens 16] [--kernels ref|pallas]
@@ -22,10 +28,31 @@ from repro.configs import get_arch
 from repro.core import steps
 from repro.core.quantization import quantize_tree, tree_storage_bytes
 from repro.models import backbone as bb
+from repro.serve import ServeEngine, kv_bytes_per_token
+
+B = 4
+PROMPT_LEN = 8
 
 
-def _cache_bytes(cache):
-    return sum(t.size * t.dtype.itemsize for t in jax.tree.leaves(cache))
+def _pool_bytes(pools):
+    return sum(t.size * t.dtype.itemsize for t in jax.tree.leaves(pools))
+
+
+def legacy_greedy_loop(params, cfg, prompt, n_new, max_len, kernels):
+    """The pre-engine loop: prompt teacher-forced token-by-token through
+    `decode_step` — the byte-stability reference for the f32 engine leg."""
+    cache = bb.init_cache(cfg, 1, max_len)
+    step = jax.jit(functools.partial(steps.decode_step, cfg=cfg, kernel_impl=kernels))
+    tok = jnp.asarray([[prompt[0]]], jnp.int32)
+    out = []
+    for t in range(len(prompt) + n_new - 1):
+        logits, cache = step(params, {"tokens": tok}, cache, jnp.int32(t))
+        if t + 1 < len(prompt):
+            tok = jnp.asarray([[prompt[t + 1]]], jnp.int32)
+        else:
+            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            out.append(int(tok[0, 0]))
+    return out
 
 
 def main() -> None:
@@ -33,60 +60,54 @@ def main() -> None:
     ap.add_argument("--arch", default="internlm2-1.8b")
     ap.add_argument("--tokens", type=int, default=16, help="tokens to generate")
     ap.add_argument("--kernels", default="ref", choices=["ref", "pallas"],
-                    help="OpSet for the quantized leg's backbone decode")
+                    help="OpSet for the backbone decode")
     args = ap.parse_args()
     n_new = args.tokens
 
     cfg = get_arch(args.arch).reduced()
     bp_f32 = bb.init_backbone(jax.random.PRNGKey(0), cfg)
     bp_q = quantize_tree(bp_f32, bits=8, min_size=1024)
-    B, MAXLEN = 4, 48
-    step_f = jax.jit(functools.partial(steps.decode_step, cfg=cfg))
-    step_q = jax.jit(functools.partial(steps.decode_step, cfg=cfg, kernel_impl=args.kernels))
+    max_len = PROMPT_LEN + n_new
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(2), (B, PROMPT_LEN), 0, cfg.vocab).tolist()
 
-    def generate(step, params, cache):
-        tok = jax.random.randint(jax.random.PRNGKey(2), (B, 1), 0, cfg.vocab)
-        toks, last = [], None
-        for t in range(n_new):
-            inp = {"embeds": jnp.zeros((B, 1, cfg.d_model))} if cfg.frontend else {"tokens": tok}
-            logits, cache = step(params, inp, cache, jnp.int32(t))
-            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-            toks.append(tok)
-            last = logits
-        return jnp.concatenate(toks, 1), cache, last
+    def run(params, kv_policy, kernels):
+        eng = ServeEngine(
+            params, cfg, kernel_impl=kernels, kv_policy=kv_policy,
+            page_size=8, max_len=max_len, max_batch=B)
+        t0 = time.perf_counter()
+        handles = [eng.submit(p, max_new_tokens=n_new) for p in prompts]
+        eng.drain()
+        return [h.result() for h in handles], time.perf_counter() - t0, eng
 
-    t0 = time.perf_counter()
-    ref, c_f, lg_f = generate(step_f, bp_f32, bb.init_cache(cfg, B, MAXLEN))
-    t_f = time.perf_counter() - t0
+    ref, t_f, eng_f = run(bp_f32, "f32", "ref")
+    out, t_q, eng_q = run(bp_q, "int8", args.kernels)
 
-    t0 = time.perf_counter()
-    out, c_q, lg_q = generate(step_q, bp_q, bb.init_cache(cfg, B, MAXLEN, kv_quant=8))
-    t_q = time.perf_counter() - t0
-
-    agree = float(jnp.mean((ref == out).astype(jnp.float32)))
-    print(f"arch={cfg.name}  {n_new} tokens × batch {B}  kernels={args.kernels}")
+    n_tok = sum(len(r) for r in ref)
+    agree = sum(
+        int(a == b) for ra, rb in zip(ref, out) for a, b in zip(ra, rb)
+    ) / n_tok
+    print(f"arch={cfg.name}  {n_new} tokens × batch {B}  kernels={args.kernels}  "
+          f"prefill={eng_q.prefill_mode}")
     print(f"  weights: f32 {tree_storage_bytes(bp_f32)/2**20:.1f} MB -> int8 "
           f"{tree_storage_bytes(bp_q)/2**20:.1f} MB")
-    print(f"  KV cache: f32 {_cache_bytes(c_f)/2**20:.1f} MB -> int8+scales "
-          f"{_cache_bytes(c_q)/2**20:.1f} MB")
+    print(f"  KV pool: f32 {_pool_bytes(eng_f.pools)/2**20:.2f} MB -> int8+scales "
+          f"{_pool_bytes(eng_q.pools)/2**20:.2f} MB  "
+          f"({kv_bytes_per_token(cfg, 'f32')} -> "
+          f"{kv_bytes_per_token(cfg, 'int8')} KV bytes/token)")
     print(f"  wall: f32 {t_f:.2f}s, quantized {t_q:.2f}s (CPU; TPU target is "
           f"bandwidth-bound where the 4x byte cut pays)")
     print(f"  greedy-token agreement: {agree:.1%} (random weights -> near-"
           f"uniform logits; step flips compound autoregressively)")
 
-    # faithfulness check under teacher forcing (same tokens through both)
-    forced = jax.random.randint(jax.random.PRNGKey(3), (B, n_new), 0, cfg.vocab)
-    cf, cq = bb.init_cache(cfg, B, MAXLEN), bb.init_cache(cfg, B, MAXLEN, kv_quant=8)
-    worst = 0.0
-    for t in range(n_new):
-        inp = ({"embeds": jnp.zeros((B, 1, cfg.d_model))} if cfg.frontend
-               else {"tokens": forced[:, t : t + 1]})
-        lf, cf = step_f(bp_f32, inp, cf, jnp.int32(t))
-        lq, cq = step_q(bp_q, inp, cq, jnp.int32(t))
-        worst = max(worst, float(jnp.max(jnp.abs(lq - lf))) / (float(jnp.max(jnp.abs(lf))) + 1e-6))
-    print(f"  max relative logit deviation (teacher-forced, int8 W + int8 KV): {worst:.2%}")
-    assert worst < 0.10, "quantized serving diverged from the f32 reference"
-    print("ok")
+    # byte-stability gate: the f32 engine leg must reproduce the legacy
+    # token-by-token decode loop exactly
+    for i, p in enumerate(prompts):
+        legacy = legacy_greedy_loop(bp_f32, cfg, p, n_new, max_len, "ref")
+        assert ref[i] == legacy, (
+            f"request {i}: engine f32 output diverged from the legacy loop:\n"
+            f"  engine: {ref[i]}\n  legacy: {legacy}")
+    print("  engine(f32 KV) == legacy decode_step loop: ok")
 
 
 if __name__ == "__main__":

@@ -93,6 +93,15 @@ class OpSet:
         k, v: (B,S,Hkv,hd), rope applied. Returns (B,S,H·hd)."""
         raise NotImplementedError
 
+    def paged_attention(self, q, k_pages, v_pages, k_scale, v_scale,
+                        block_tables, lengths, cfg, spec):
+        """Paged-KV decode attention (the serving engine's core).
+        q: (B, Hkv, n_rep, hd) grouped post-rope new-token query;
+        pages: (n_pages, page, Hkv, hd) int8/f32/bf16 pool (+ scales
+        for int8, else None); block_tables: (B, max_pages) int32;
+        lengths: (B,) int32. Returns (B, Hkv, n_rep, hd) f32."""
+        raise NotImplementedError
+
     def embed_lookup(self, embed, tokens):
         """Token embedding gather; ``embed`` may be a QTensor."""
         raise NotImplementedError
@@ -143,6 +152,16 @@ class RefOpSet(OpSet):
         from repro.models.layers import ref_attention_core
 
         return ref_attention_core(q, k, v, cfg, spec, block_k)
+
+    def paged_attention(self, q, k_pages, v_pages, k_scale, v_scale,
+                        block_tables, lengths, cfg, spec):
+        from repro.kernels.ref import paged_attention_ref
+
+        return paged_attention_ref(
+            q, k_pages, v_pages, block_tables, lengths,
+            k_scale=k_scale, v_scale=v_scale, window=spec.window,
+            attn_softcap=cfg.attn_softcap,
+        )
 
     def embed_lookup(self, embed, tokens):
         return jnp.take(maybe_dequantize_tree(embed), tokens, axis=0)
@@ -233,6 +252,16 @@ class PallasOpSet(OpSet):
             attn_softcap=cfg.attn_softcap, interpret=self.interpret,
         )[:, :S]
         return o.reshape(B, H, S, hd).transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+
+    def paged_attention(self, q, k_pages, v_pages, k_scale, v_scale,
+                        block_tables, lengths, cfg, spec):
+        from repro.kernels.paged_attention import paged_attention
+
+        return paged_attention(
+            q, k_pages, v_pages, block_tables, lengths,
+            k_scale=k_scale, v_scale=v_scale, window=spec.window,
+            attn_softcap=cfg.attn_softcap, interpret=self.interpret,
+        )
 
     def embed_lookup(self, embed, tokens):
         if not isinstance(embed, QTensor):

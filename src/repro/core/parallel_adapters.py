@@ -204,3 +204,116 @@ def adapter_decode(
     )
     a = rms_norm(a, adapter_params["out_norm"], acfg.norm_eps)
     return a @ adapter_params["up"], list(new_cache)
+
+
+# ---------------------------------------------------------------------------
+# Multi-adapter serving (one decode batch, one adapter per request)
+# ---------------------------------------------------------------------------
+
+
+def stack_adapters(adapters):
+    """Stack per-user adapter trees into one bank with a leading user
+    axis — the resident form the multi-tenant engine gathers from."""
+    adapters = list(adapters)
+    if not adapters:
+        raise ValueError("need at least one adapter")
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *adapters)
+
+
+def gather_adapters(bank, user_idx):
+    """Per-request adapter stacks: bank leaves (U, ...) gathered down to
+    (B, ...) by ``user_idx`` (B,) int32 — duplicates are fine."""
+    return jax.tree.map(lambda t: t[user_idx], bank)
+
+
+def batched_adapter_decode(adapter_batch, cfg, b0_t, taps_t, cache, lengths, r: int = 8):
+    """One adapter step for B requests with B *different* adapters and
+    per-request write positions (continuous batching is ragged).
+
+    adapter_batch: adapter tree with a leading request axis (B, ...) —
+    see :func:`gather_adapters`; b0_t: (B,1,d); taps_t: (n_p,B,1,d);
+    cache: adapter cache with request axis 1 — leaves (n_p, B, L, ...);
+    lengths: (B,) int32 per-request write index. Returns
+    (side (B,1,d), new_cache) — row b is exactly
+    :func:`adapter_decode` of request b alone (the λ-mix, blocks and
+    cache update vmap over the request axis unchanged)."""
+
+    def lane(ap, b0, taps, cache_1, pos):
+        cache_1 = jax.tree.map(lambda t: t[:, None], cache_1)
+        side, nc = adapter_decode(ap, cfg, b0[None], taps[:, None], cache_1, pos, r)
+        return side[0], jax.tree.map(lambda t: t[:, 0], nc)
+
+    return jax.vmap(lane, in_axes=(0, 0, 1, 1, 0), out_axes=(0, 1))(
+        adapter_batch, b0_t, taps_t, cache, lengths
+    )
+
+
+def adapter_prefill(
+    adapter_params, cfg, b0, taps, positions, max_len: int, r: int = 8
+):
+    """Side-network prefill: one batched forward over the prompt that
+    also captures the adapter's KV caches (the decode-ready state) —
+    the serving twin of :func:`adapter_forward`.
+
+    b0: (B,S,d); taps: (n_p,B,S,d); positions: (B,S) or (3,B,S).
+    Returns (side (B,S,d), caches) where ``caches`` has the
+    :func:`init_adapter_cache` layout (leaves (n_p, B, max_len, ...))
+    with the first S slots holding the prompt KV. Attention-pattern
+    adapters only — SSM side networks have no forward-final-state API
+    and take the engine's stepwise prefill path instead."""
+    acfg = adapter_config(cfg, r)
+    if any(s.kind != "attn" for s in acfg.pattern):
+        raise ValueError(
+            "adapter_prefill supports attention-pattern adapters only; "
+            f"got {tuple(s.kind for s in acfg.pattern)}"
+        )
+    S = b0.shape[1]
+    if S > max_len:
+        raise ValueError(f"prompt length {S} exceeds max_len {max_len}")
+    downs = adapter_params["downs"]
+    lambdas = jnp.clip(adapter_params["lambda"], 0.0, 1.0)
+    a = b0 @ downs[0]
+
+    def period_fn(carry, xs):
+        a_prev = carry
+        block_slice, down_i, lam_i, b_i = xs
+        mixed = lam_i * (b_i @ down_i) + (1.0 - lam_i) * a_prev
+        h = mixed.astype(a_prev.dtype)
+        kvs = []
+        for j, spec in enumerate(acfg.pattern):
+            h, kv = apply_block(
+                block_slice[j], h, acfg, spec, positions, return_kv=True
+            )
+            kvs.append(kv)
+        return h, tuple(kvs)
+
+    a, kvs = jax.lax.scan(
+        period_fn, a, (tuple(adapter_params["blocks"]), downs[1:], lambdas, taps)
+    )
+    a = rms_norm(a, adapter_params["out_norm"], acfg.norm_eps)
+    side = a @ adapter_params["up"]
+    caches = []
+    for k, v in kvs:  # each (n_p, B, S, Hkv_a, hd_a)
+        pad = ((0, 0), (0, 0), (0, max_len - S), (0, 0), (0, 0))
+        caches.append({"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)})
+    return side, caches
+
+
+def batched_adapter_prefill(
+    adapter_batch, cfg, b0, taps, positions, max_len: int, r: int = 8
+):
+    """Per-request-adapter prefill: :func:`adapter_prefill` vmapped over
+    a leading request axis of the adapter tree. Same shapes as
+    :func:`adapter_prefill` plus the (B, ...) adapter_batch."""
+    pos_axis = positions.ndim - 2  # 0 for (B,S), 1 for mrope (3,B,S)
+
+    def lane(ap, b0_1, taps_1, pos_1):
+        pos_1 = jnp.expand_dims(pos_1, pos_axis)
+        side, caches = adapter_prefill(
+            ap, cfg, b0_1[None], taps_1[:, None], pos_1, max_len, r
+        )
+        return side[0], jax.tree.map(lambda t: t[:, 0], caches)
+
+    return jax.vmap(lane, in_axes=(0, 0, 1, pos_axis), out_axes=(0, 1))(
+        adapter_batch, b0, taps, positions
+    )

@@ -1,0 +1,180 @@
+"""Pallas TPU kernel: paged-KV decode attention (the serving engine's core).
+
+One decode step attends the new token's query against a KV cache that
+lives in fixed-size *pages* scattered through a global pool
+(`repro.serve.paging`). The kernel walks each request's page table via
+scalar prefetch — ``PrefetchScalarGridSpec`` hands the (B, max_pages)
+block table and the (B,) lengths to every ``index_map``, so the K/V
+``BlockSpec`` for grid step (b, j) DMAs page ``block_tables[b, j]``
+straight from the pool; the f32 page is never materialised in HBM.
+INT8 pages are dequantized element-wise in VMEM (payload + per-(token,
+kv-head) absmax scales), exactly like `quant_matmul` does for weights.
+
+Grid: (B, max_pages) with pages innermost; VMEM scratch carries the
+online-softmax state (acc, m, l) across pages; the final page step
+normalises and writes the (Hkv, n_rep, hd) output block. Queries are
+grouped GQA-style — head g·n_rep+r reads KV head g — so the repeated-KV
+layout is never built.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.cached_step import _auto_interpret
+
+_NEG_INF = -1e30
+
+
+def _kernel(
+    bt_ref, len_ref,  # scalar-prefetch: (B, max_pages) int32, (B,) int32
+    q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, scale: float, window: Optional[int], cap: Optional[float],
+    page: int, n_pages_walked: int, quantized: bool,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # (Hkv, n_rep, hd)
+    k = k_ref[0].astype(jnp.float32)  # (page, Hkv, hd)
+    v = v_ref[0].astype(jnp.float32)
+    if quantized:  # in-VMEM dequant: int8 payload × per-(token, head) scale
+        k = k * ks_ref[0].astype(jnp.float32)[..., None]
+        v = v * vs_ref[0].astype(jnp.float32)[..., None]
+
+    # scores per KV head batch: (Hkv, n_rep, page)
+    s = jax.lax.dot_general(
+        q, k, (((2,), (2,)), ((0,), (1,))), preferred_element_type=jnp.float32
+    ) * scale
+    if cap is not None:
+        s = cap * jnp.tanh(s / cap)
+    pos = len_ref[b]  # the new token's position: kpos <= pos attends it
+    shape = s.shape
+    kpos = j * page + jax.lax.broadcasted_iota(jnp.int32, shape, 2)
+    valid = kpos <= pos
+    if window is not None:
+        valid &= kpos > pos - window
+    s = jnp.where(valid, s, _NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    # a fully-masked page leaves m_new at -inf → exp(0)=1 rows; zero them
+    p = jnp.where(valid, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    m_ref[...] = m_new
+    pv = jax.lax.dot_general(  # (Hkv, n_rep, hd)
+        p, v, (((2,), (0,)), ((0,), (1,))), preferred_element_type=jnp.float32
+    )
+    acc_ref[...] = acc_ref[...] * alpha[..., None] + pv
+
+    @pl.when(j == n_pages_walked - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = acc_ref[...] / l[..., None]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "attn_softcap", "interpret")
+)
+def _paged_attention_call(
+    q, k_pages, v_pages, k_scale, v_scale, block_tables, lengths,
+    window, attn_softcap, interpret,
+):
+    B, hkv, n_rep, hd = q.shape
+    page = k_pages.shape[1]
+    max_pages = block_tables.shape[1]
+    # supported envelope: one page of K/V plus the per-batch-row q/acc
+    # blocks must fit VMEM (palint budgets the estimate off these bounds)
+    assert page <= 64 and hkv <= 16 and n_rep <= 32 and hd <= 256, (
+        f"paged attention geometry out of envelope: page={page} "
+        f"hkv={hkv} n_rep={n_rep} hd={hd}")
+    quantized = k_scale is not None
+    scale = hd ** -0.5
+
+    kernel = functools.partial(
+        _kernel, scale=scale, window=window, cap=attn_softcap,
+        page=page, n_pages_walked=max_pages, quantized=quantized,
+    )
+    page_spec = pl.BlockSpec(
+        (1, page, hkv, hd), lambda b, j, bt, ln: (bt[b, j], 0, 0, 0))
+    row_spec = pl.BlockSpec(
+        (1, hkv, n_rep, hd), lambda b, j, bt, ln: (b, 0, 0, 0))
+    in_specs = [row_spec, page_spec, page_spec]
+    operands = [q, k_pages, v_pages]
+    if quantized:
+        scale_spec = pl.BlockSpec(
+            (1, page, hkv), lambda b, j, bt, ln: (bt[b, j], 0, 0))
+        in_specs += [scale_spec, scale_spec]
+        operands += [k_scale, v_scale]
+    else:
+        # the kernel signature is fixed; feed (1,1,1) dummies the
+        # non-quantized variant never reads
+        dummy = jnp.zeros((1, 1, 1), jnp.float32)
+        in_specs += [
+            pl.BlockSpec((1, 1, 1), lambda b, j, bt, ln: (0, 0, 0))] * 2
+        operands += [dummy, dummy]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, max_pages),
+        in_specs=in_specs,
+        out_specs=row_spec,
+        scratch_shapes=[
+            pltpu.VMEM((hkv, n_rep, hd), jnp.float32),
+            pltpu.VMEM((hkv, n_rep), jnp.float32),
+            pltpu.VMEM((hkv, n_rep), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, hkv, n_rep, hd), jnp.float32),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32), *operands)
+
+
+def paged_attention(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_tables: jax.Array,
+    lengths: jax.Array,
+    *,
+    k_scale: Optional[jax.Array] = None,
+    v_scale: Optional[jax.Array] = None,
+    window: Optional[int] = None,
+    attn_softcap: Optional[float] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Paged decode attention → (B, Hkv, n_rep, hd) f32.
+
+    q: (B, Hkv, n_rep, hd) post-rope new-token query (grouped GQA
+    layout); k/v_pages: (n_pages, page, Hkv, hd) pool — int8 payload
+    with ``k_scale``/``v_scale`` (n_pages, page, Hkv), or plain
+    f32/bf16; block_tables: (B, max_pages) int32 (page id 0 is the null
+    page — masked rows may point anywhere); lengths: (B,) int32, the
+    index the new token was written at (``kpos <= lengths[b]`` attends).
+
+    Oracle: :func:`repro.kernels.ref.paged_attention_ref`.
+    ``interpret=None`` auto-selects the Pallas interpreter off-TPU.
+    """
+    if (k_scale is None) != (v_scale is None):
+        raise ValueError("k_scale and v_scale must be passed together")
+    return _paged_attention_call(
+        q, k_pages, v_pages, k_scale, v_scale, block_tables, lengths,
+        window, attn_softcap, _auto_interpret(interpret),
+    )

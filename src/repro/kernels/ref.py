@@ -42,6 +42,58 @@ def lmhead_ce_ref(h: jax.Array, w: jax.Array, labels: jax.Array, softcap=None) -
     return -jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32), axis=1)[:, 0]
 
 
+def paged_attention_ref(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_tables: jax.Array,
+    lengths: jax.Array,
+    *,
+    k_scale: Optional[jax.Array] = None,
+    v_scale: Optional[jax.Array] = None,
+    window: Optional[int] = None,
+    attn_softcap: Optional[float] = None,
+) -> jax.Array:
+    """Paged decode attention oracle: gather-then-dense.
+
+    q: (B, Hkv, n_rep, hd) post-rope query of the new token;
+    k/v_pages: (n_pages, page, Hkv, hd) — int8 payload with
+    ``[kv]_scale`` (n_pages, page, Hkv) scales, or plain f32/bf16;
+    block_tables: (B, max_pages) int32 page ids (0 = the null page);
+    lengths: (B,) int32 — tokens already resident, i.e. the index the
+    new token was written at (it is attended: ``kpos <= lengths[b]``).
+    Returns (B, Hkv, n_rep, hd) f32.
+
+    Dequantizes element-wise *before* the dot — the same order as the
+    in-VMEM dequant of ``kernels.paged_attention`` (the linear-cache
+    ``attention_decode_quant`` folds scales after the einsum instead,
+    so int8 parity against it is per-policy tolerance, not bitwise).
+    """
+    B = q.shape[0]
+    page = k_pages.shape[1]
+    hd = q.shape[-1]
+    k = k_pages[block_tables].astype(jnp.float32)  # (B, maxp, page, Hkv, hd)
+    v = v_pages[block_tables].astype(jnp.float32)
+    if k_scale is not None:
+        k = k * k_scale[block_tables].astype(jnp.float32)[..., None]
+    if v_scale is not None:
+        v = v * v_scale[block_tables].astype(jnp.float32)[..., None]
+    max_pages = block_tables.shape[1]
+    S = max_pages * page
+    k = k.reshape(B, S, k.shape[-2], hd)
+    v = v.reshape(B, S, v.shape[-2], hd)
+    s = jnp.einsum("bgrd,bsgd->bgrs", q.astype(jnp.float32), k) * (hd ** -0.5)
+    if attn_softcap is not None:
+        s = attn_softcap * jnp.tanh(s / attn_softcap)
+    kpos = jnp.arange(S)
+    valid = kpos[None, :] <= lengths[:, None]
+    if window is not None:
+        valid &= kpos[None, :] > (lengths[:, None] - window)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bgrs,bsgd->bgrd", w, v)
+
+
 def flash_attention_ref(
     q: jax.Array,
     k: jax.Array,

@@ -106,7 +106,7 @@ def abstract_backbone(cfg, dtype=jnp.float32):
 # ---------------------------------------------------------------------------
 
 
-def apply_block(p, x, cfg, spec, positions, ops=None):
+def apply_block(p, x, cfg, spec, positions, ops=None, return_kv: bool = False):
     ops = ops if ops is not None else _REF_OPS
     # FSDP weight gather (§Perf iteration 2): replicate this layer's slice
     # over the data axes so GSPMD all-gathers weights (not activations).
@@ -117,8 +117,14 @@ def apply_block(p, x, cfg, spec, positions, ops=None):
     # quantized and feed quant_matmul inside ops.matmul
     p = ops.prepare_block(p, spec)
     h = ops.rms_norm(x, p["ln1"], cfg.norm_eps)
+    kv = None
     if spec.kind == "attn":
-        mix = attention_forward(p["mixer"], h, cfg, spec, positions, ops=ops)
+        if return_kv:
+            mix, kv = attention_forward(
+                p["mixer"], h, cfg, spec, positions, ops=ops, return_kv=True
+            )
+        else:
+            mix = attention_forward(p["mixer"], h, cfg, spec, positions, ops=ops)
     elif spec.kind == "mamba":
         mix = ssm.mamba_forward(p["mixer"], h, cfg)
     elif spec.kind == "mlstm":
@@ -133,6 +139,10 @@ def apply_block(p, x, cfg, spec, positions, ops=None):
         else:
             x = x + mlp_forward(p["ffn"], h, ops=ops)
         x = psharding.constrain_hidden(x)
+    if return_kv:
+        # (k, v) post-rope for attention blocks, None otherwise — the
+        # paged-serving prefill scatters these into the KV page pool
+        return x, kv
     return x
 
 

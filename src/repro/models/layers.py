@@ -351,14 +351,24 @@ def attention_forward(
     positions: jax.Array,
     block_k: int = 1024,
     ops=None,
-) -> jax.Array:
-    """Full-sequence (train/prefill) attention. x: (B,S,d); positions: (B,S) or (3,B,S)."""
+    return_kv: bool = False,
+):
+    """Full-sequence (train/prefill) attention. x: (B,S,d); positions: (B,S) or (3,B,S).
+
+    ``return_kv=True`` additionally returns the post-rope ``(k, v)``
+    pair ((B,S,Hkv,hd) each) — the prefill path of the paged serving
+    engine captures them into the page pool instead of re-projecting
+    the prompt token by token."""
     q, k, v = _project_qkv(p, x, cfg, positions, ops)
     if ops is not None:
         o = ops.attention(q, k, v, cfg, spec, block_k)
-        return ops.matmul(o, p["wo"])
-    o = ref_attention_core(q, k, v, cfg, spec, block_k)
-    return o @ p["wo"]
+        out = ops.matmul(o, p["wo"])
+    else:
+        o = ref_attention_core(q, k, v, cfg, spec, block_k)
+        out = o @ p["wo"]
+    if return_kv:
+        return out, (k, v)
+    return out
 
 
 def quantize_kv_token(t: jax.Array):

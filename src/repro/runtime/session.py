@@ -495,6 +495,25 @@ class EdgeSession:
                 f"{spec.cache_compress})")
         self._finished = True
 
+    def serving_engine(self, adapters=None, **kw):
+        """Hand the session's artifacts to the serving layer: a
+        :class:`~repro.serve.ServeEngine` over this session's (quantized)
+        frozen backbone and, by default, the adapter it just trained
+        (registered as ``"local"``). Pass ``adapters={name: tree, ...}``
+        to serve a different bank — e.g. side networks pulled from peer
+        devices' checkpoints. Engine knobs (``kv_policy``, ``page_size``,
+        ``max_len``, ``max_batch``, ...) pass through; ``r`` and
+        ``kernel_impl`` default to the run's spec."""
+        from repro.serve import ServeEngine
+
+        if self.backbone is None:
+            raise RunSpecError("serving_engine() needs an open()ed session")
+        if adapters is None:
+            adapters = {"local": self.adapter}
+        kw.setdefault("r", self.spec.r)
+        kw.setdefault("kernel_impl", self.spec.kernels)
+        return ServeEngine(self.backbone, self.cfg, adapters, **kw)
+
     def run(self, hooks=()) -> list:
         """The whole lifecycle in one call: open → every epoch through
         an :class:`~repro.runtime.runner.EpochRunner` → finish → close.

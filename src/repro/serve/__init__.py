@@ -1,0 +1,29 @@
+"""Multi-tenant serving: paged INT8 KV cache + continuous batching.
+
+Layers (ROADMAP serving item):
+
+* `repro.serve.paging` — page pools, free-list allocator, page tables.
+* `repro.serve.decode` — the jitted batched paged decode/prefill steps
+  (multi-adapter: B requests, B different adapters per step).
+* `repro.serve.engine` — :class:`ServeEngine`: continuous batching,
+  size-bucketed jit shapes, per-request streaming handles.
+"""
+
+from repro.serve.engine import RequestHandle, ServeEngine
+from repro.serve.paging import (
+    OutOfPagesError,
+    PageAllocator,
+    PageTable,
+    init_pools,
+    kv_bytes_per_token,
+)
+
+__all__ = [
+    "OutOfPagesError",
+    "PageAllocator",
+    "PageTable",
+    "RequestHandle",
+    "ServeEngine",
+    "init_pools",
+    "kv_bytes_per_token",
+]

@@ -1,0 +1,232 @@
+"""Batched paged decode + prefill steps — the engine's jitted units.
+
+:func:`paged_pac_decode_step` is the paged, multi-adapter twin of
+`repro.core.steps.pac_decode_step`: one step serves B requests with B
+*different* adapters (a gathered ``(B, ...)`` adapter batch, see
+`repro.core.parallel_adapters.gather_adapters`) against KV that lives in
+the shared page pool — each request's cache is its block-table row, so
+batch composition is free to change between steps without reshaping any
+device buffer. Per-request ``lengths`` replace the single scalar ``pos``
+(continuous batching is ragged by construction).
+
+Attention dispatches through ``ops.paged_attention`` — the OpSet seam —
+so ``--kernels pallas`` runs the Pallas page-walking kernel
+(`repro.kernels.paged_attention`) and ``ref`` the gather-then-dense
+oracle; INT8 pools are dequantized inside those kernels only.
+
+:func:`paged_prefill` is the one-shot prompt path: a single batched
+forward with KV capture (``apply_block(..., return_kv=True)``) scattered
+into the pages, replacing the token-by-token teacher-forcing loop the
+serve examples used to run. Attention-only patterns — SSM/hybrid archs
+have no forward-returns-final-state API and take the engine's stepwise
+fallback (prompt tokens fed through the decode step) instead.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.opset import get_opset
+from repro.core.parallel_adapters import (
+    batched_adapter_decode,
+    batched_adapter_prefill,
+)
+from repro.models import ssm
+from repro.models.backbone import (
+    _REF_OPS,
+    apply_block,
+    embed_inputs,
+    logits_from_hidden,
+)
+from repro.models.layers import _project_qkv, mlp_forward
+from repro.models.moe import moe_forward
+from repro.serve.paging import write_prompt_kv, write_token_kv
+
+
+def _resolve_ops(kernel_impl, interpret):
+    if kernel_impl == "ref":
+        return _REF_OPS
+    return get_opset(kernel_impl, interpret=interpret)
+
+
+def _paged_attention_block(p, h, cfg, spec, entry, block_tables, lengths, ops):
+    """One attention mixer against the page pool. h: (B,1,d);
+    entry: one period slice of an attention pool. Returns (mix, entry')."""
+    B = h.shape[0]
+    if cfg.rope == "mrope":
+        positions = jnp.broadcast_to(lengths[None, :, None], (3, B, 1)).astype(jnp.int32)
+    else:
+        positions = lengths[:, None].astype(jnp.int32)
+    q, k, v = _project_qkv(p, h, cfg, positions, ops)
+    entry = write_token_kv(entry, k, v, block_tables, lengths)
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    qh = q[:, 0].reshape(B, cfg.n_kv_heads, n_rep, cfg.hd)
+    if isinstance(entry["k"], dict):  # INT8 pages: payload + scales
+        o = ops.paged_attention(
+            qh, entry["k"]["q"], entry["v"]["q"],
+            entry["k"]["scale"], entry["v"]["scale"],
+            block_tables, lengths, cfg, spec,
+        )
+    else:
+        o = ops.paged_attention(
+            qh, entry["k"], entry["v"], None, None,
+            block_tables, lengths, cfg, spec,
+        )
+    o = o.reshape(B, 1, cfg.n_heads * cfg.hd).astype(h.dtype)
+    return ops.matmul(o, p["wo"]), entry
+
+
+def _apply_block_paged(p, x, cfg, spec, entry, block_tables, lengths, ops):
+    """`apply_block_decode` with the attention cache paged; SSM kinds run
+    on per-slot state rows (entry: (B, ...) leaves) unchanged."""
+    p = ops.prepare_block(p, spec)
+    h = ops.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if spec.kind == "attn":
+        mix, new_entry = _paged_attention_block(
+            p["mixer"], h, cfg, spec, entry, block_tables, lengths, ops
+        )
+    elif spec.kind == "mamba":
+        mix, new_entry = ssm.mamba_decode(p["mixer"], h, cfg, entry)
+    elif spec.kind == "mlstm":
+        mix, new_entry = ssm.mlstm_decode(p["mixer"], h, cfg, entry)
+    elif spec.kind == "slstm":
+        mix, new_entry = ssm.slstm_decode(p["mixer"], h, cfg, entry)
+    else:
+        raise ValueError(spec.kind)
+    x = x + mix
+    if "ffn" in p:
+        h = ops.rms_norm(x, p["ln2"], cfg.norm_eps)
+        if spec.moe and cfg.moe is not None:
+            # decode: T = B tokens — widen capacity like apply_block_decode
+            x = x + moe_forward(
+                p["ffn"], h, cfg.moe, capacity_factor=2.0 * cfg.moe.capacity_factor
+            )
+        else:
+            x = x + mlp_forward(p["ffn"], h, ops=ops)
+    return x, new_entry
+
+
+def paged_pac_decode_step(
+    backbone_params,
+    adapter_batch,
+    tokens: jax.Array,
+    pools: List,
+    block_tables: jax.Array,
+    lengths: jax.Array,
+    adapter_cache,
+    *,
+    cfg,
+    r: int = 8,
+    kernel_impl: str = "ref",
+    interpret: Optional[bool] = None,
+):
+    """One continuous-batching decode step: B requests, B adapters.
+
+    tokens: (B,1) int32; pools: per pattern position — attention entries
+    are whole page pools (leaves (n_p, n_pages, page, ...)), SSM entries
+    per-slot state rows sliced to B; block_tables: (B, max_pages) int32;
+    lengths: (B,) int32 per-request write index; adapter_batch /
+    adapter_cache: ``None`` to serve the bare backbone, else a gathered
+    (B, ...) adapter tree + its (n_p, B, L, ...) cache.
+
+    Returns (logits (B,1,V), pools', adapter_cache'). Row b equals a
+    B=1 call for request b alone — the batch never mixes rows.
+    """
+    ops = _resolve_ops(kernel_impl, interpret)
+    block_tables = block_tables.astype(jnp.int32)
+    lengths = lengths.astype(jnp.int32)
+    x = ops.embed_lookup(backbone_params["embed"], tokens)
+
+    def period_fn(carry, xs):
+        block_slice, pool_slice = xs
+        h = carry
+        new_entries = []
+        for i, spec in enumerate(cfg.pattern):
+            h, ne = _apply_block_paged(
+                block_slice[i], h, cfg, spec, pool_slice[i],
+                block_tables, lengths, ops,
+            )
+            new_entries.append(ne)
+        return h, (tuple(new_entries), h)
+
+    b_final, (new_pools, taps_t) = jax.lax.scan(
+        period_fn, x, (tuple(backbone_params["blocks"]), tuple(pools))
+    )
+    if adapter_batch is None:
+        side, new_acache = 0.0, adapter_cache
+    else:
+        side, new_acache = batched_adapter_decode(
+            adapter_batch, cfg, x, taps_t, adapter_cache, lengths, r
+        )
+    logits = logits_from_hidden(backbone_params, cfg, b_final + side)
+    return logits, list(new_pools), new_acache
+
+
+def paged_prefill(
+    backbone_params,
+    adapter_batch,
+    tokens: jax.Array,
+    lengths: jax.Array,
+    pools: List,
+    block_tables: jax.Array,
+    *,
+    cfg,
+    max_len: int,
+    r: int = 8,
+    kernel_impl: str = "ref",
+    interpret: Optional[bool] = None,
+):
+    """One-shot prompt ingestion: a single batched forward whose captured
+    per-layer K/V is scattered into the page pool, plus the adapter-side
+    prefill — the prompt is processed once, not token by token.
+
+    tokens: (B, S) int32, left-aligned, padded past ``lengths[b]``
+    (padding KV lands on the null page); block_tables must already cover
+    ``ceil(lengths/page)`` pages per row. Returns
+    (last-token logits (B,1,V), pools', adapter_caches) — adapter caches
+    in the `init_adapter_cache` layout, ``None`` when ``adapter_batch``
+    is.
+    """
+    if any(s.kind != "attn" for s in cfg.pattern):
+        raise ValueError(
+            "one-shot paged prefill needs an all-attention pattern; "
+            f"{cfg.name} has {tuple(s.kind for s in cfg.pattern)} — "
+            "the engine's stepwise prompt path covers SSM/hybrid archs"
+        )
+    ops = _resolve_ops(kernel_impl, interpret)
+    block_tables = block_tables.astype(jnp.int32)
+    lengths = lengths.astype(jnp.int32)
+    x, positions = embed_inputs(backbone_params, cfg, {"tokens": tokens}, ops=ops)
+    x0 = x
+
+    def period_fn(carry, block_slice):
+        h = carry
+        kvs = []
+        for i, spec in enumerate(cfg.pattern):
+            h, kv = apply_block(
+                block_slice[i], h, cfg, spec, positions, ops=ops, return_kv=True
+            )
+            kvs.append(kv)
+        return h, (tuple(kvs), h)
+
+    b_final, (kvs, taps) = jax.lax.scan(
+        period_fn, x, tuple(backbone_params["blocks"])
+    )
+    new_pools = [
+        write_prompt_kv(pools[i], k, v, block_tables, lengths)
+        for i, (k, v) in enumerate(kvs)
+    ]
+    if adapter_batch is None:
+        side, acaches = 0.0, None
+    else:
+        side, acaches = batched_adapter_prefill(
+            adapter_batch, cfg, x0, taps, positions, max_len, r
+        )
+    h = b_final + side
+    idx = jnp.maximum(lengths - 1, 0)
+    h_last = jnp.take_along_axis(h, idx[:, None, None], axis=1)
+    logits = logits_from_hidden(backbone_params, cfg, h_last)
+    return logits, new_pools, acaches

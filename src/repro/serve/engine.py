@@ -1,0 +1,467 @@
+"""Continuous-batching multi-tenant serving engine.
+
+One :class:`ServeEngine` serves many concurrent requests, each with its
+own fine-tuned adapter, over a single shared KV page pool
+(`repro.serve.paging`) — the paper's personal-LLM endgame: every edge
+user's side network is a few MB, so one host serves a whole pool of
+personalised models from one frozen (quantized) backbone.
+
+Scheduling model:
+
+* **Continuous batching** — requests join and leave the running decode
+  batch between steps. A request's cache is its page-table row, so
+  admission/completion never reshapes device state; only the small
+  per-slot rows (adapter cache, SSM states) live at fixed row indices,
+  kept compacted to a prefix by swap-remove on completion.
+* **Fixed jit shapes** — each decode step runs at the smallest
+  power-of-two bucket ≥ the active count (capped at ``max_batch``), so
+  the engine compiles a handful of shapes up front and admission never
+  retriggers compilation (``n_traces`` counts traces; tests pin it).
+* **Two prompt paths** — all-attention archs prefill the whole prompt in
+  one batched forward with KV capture (`repro.serve.decode.paged_prefill`);
+  SSM/hybrid archs fall back to *stepwise* prefill, feeding prompt
+  tokens through the same paged decode step (no extra compilation).
+
+Requests stream: :meth:`submit` returns a :class:`RequestHandle` whose
+``tokens()`` generator yields ids as they are produced (thread-safe —
+:meth:`start` runs the step loop in a background thread; or call
+:meth:`drain` inline). Sampling is greedy (argmax), the deterministic
+path the parity tests pin.
+"""
+
+from __future__ import annotations
+
+import collections
+import queue
+import threading
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.parallel_adapters import (
+    gather_adapters,
+    init_adapter_cache,
+    stack_adapters,
+)
+from repro.serve import paging
+from repro.serve.decode import paged_pac_decode_step, paged_prefill
+
+
+def _bucket(n: int, cap: int) -> int:
+    b = 1
+    while b < n:
+        b *= 2
+    return min(b, cap)
+
+
+class RequestHandle:
+    """Streaming view of one request."""
+
+    def __init__(self, rid: int, prompt: Sequence[int]):
+        self.rid = rid
+        self.prompt = list(prompt)
+        self._queue = queue.Queue()
+        self._done = threading.Event()
+        self._generated: List[int] = []
+
+    def _emit(self, tok: int) -> None:
+        self._generated.append(tok)
+        self._queue.put(tok)
+
+    def _finish(self) -> None:
+        self._done.set()
+        self._queue.put(None)
+
+    def tokens(self):
+        """Yield generated token ids as they arrive (blocks; ends when
+        the request completes)."""
+        while True:
+            t = self._queue.get()
+            if t is None:
+                return
+            yield t
+
+    def result(self, timeout: Optional[float] = None) -> List[int]:
+        """Block until completion; returns all generated token ids."""
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"request {self.rid} still running")
+        return list(self._generated)
+
+    @property
+    def done(self) -> bool:
+        return self._done.is_set()
+
+
+class _Request:
+    __slots__ = (
+        "rid", "prompt", "max_new", "adapter_idx", "handle",
+        "last_token", "n_generated", "n_consumed", "finished",
+    )
+
+    def __init__(self, rid, prompt, max_new, adapter_idx, n_consumed):
+        self.rid = rid
+        self.prompt = list(prompt)
+        self.max_new = max_new
+        self.adapter_idx = adapter_idx
+        self.handle = RequestHandle(rid, prompt)
+        self.last_token = self.prompt[-1]
+        self.n_generated = 0
+        self.n_consumed = n_consumed  # prompt tokens already in the cache
+        self.finished = False
+
+    def next_input(self) -> int:
+        if self.n_consumed < len(self.prompt):
+            return self.prompt[self.n_consumed]
+        return self.last_token
+
+    def advance(self) -> bool:
+        """Account one step. True while the step only consumed a prompt
+        token (stepwise prefill — nothing to emit yet)."""
+        if self.n_consumed < len(self.prompt):
+            self.n_consumed += 1
+            return self.n_consumed < len(self.prompt)
+        return False
+
+
+class ServeEngine:
+    """Multi-tenant paged-KV serving engine (see module docstring).
+
+    backbone_params may be the quantized frozen tree (pair with
+    ``kernel_impl="pallas"`` to decode on still-quantized weights);
+    ``adapters`` maps user name → fine-tuned adapter tree, stacked once
+    into a resident bank and gathered per request row at each step.
+    ``kv_policy``: "int8" (paged block-absmax storage form), "bf16" or
+    "f32" (parity/reference). ``n_pages`` defaults to enough for
+    ``max_batch`` full-length requests (+ the null page).
+    """
+
+    def __init__(
+        self,
+        backbone_params,
+        cfg,
+        adapters: Optional[Dict[str, dict]] = None,
+        *,
+        r: int = 8,
+        kernel_impl: str = "ref",
+        kv_policy: str = "int8",
+        page_size: int = 8,
+        max_len: int = 128,
+        max_batch: int = 8,
+        n_pages: Optional[int] = None,
+        eos_id: Optional[int] = None,
+        interpret: Optional[bool] = None,
+    ):
+        self.backbone = backbone_params
+        self.cfg = cfg
+        self.r = r
+        self.kernel_impl = kernel_impl
+        self.kv_policy = kv_policy
+        self.page = page_size
+        self.max_len = max_len
+        self.max_batch = max_batch
+        self.eos_id = eos_id
+        self.interpret = interpret
+        self.max_pages = -(-max_len // page_size)
+        if n_pages is None:
+            n_pages = max_batch * self.max_pages + 1
+        self.pools = paging.init_pools(cfg, n_pages, page_size, max_batch, kv_policy)
+        self.allocator = paging.PageAllocator(n_pages)
+        self.table = paging.PageTable(self.allocator, page_size, self.max_pages)
+        self.prefill_mode = (
+            "oneshot" if all(s.kind == "attn" for s in cfg.pattern) else "stepwise"
+        )
+        if adapters:
+            self.adapter_names = list(adapters)
+            self._adapter_idx = {n: i for i, n in enumerate(self.adapter_names)}
+            self.bank = stack_adapters([adapters[n] for n in self.adapter_names])
+            self.acache = init_adapter_cache(cfg, max_batch, max_len, r)
+        else:
+            self.adapter_names, self._adapter_idx = [], {}
+            self.bank, self.acache = None, None
+        self._pending: collections.deque = collections.deque()
+        self._lock = threading.Lock()
+        self._active: List[_Request] = []
+        self._next_rid = 0
+        self._decode_fns: Dict[int, object] = {}
+        self._prefill_fns: Dict[tuple, object] = {}
+        self.n_traces = 0  # jit trace counter — admission must not grow it
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+
+    # -- submission -----------------------------------------------------
+
+    def submit(
+        self,
+        prompt: Sequence[int],
+        adapter: Optional[str] = None,
+        max_new_tokens: int = 16,
+    ) -> RequestHandle:
+        """Queue a request; returns its streaming handle (thread-safe)."""
+        prompt = list(int(t) for t in prompt)
+        if not prompt:
+            raise ValueError("empty prompt")
+        if len(prompt) + max_new_tokens > self.max_len:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new_tokens ({max_new_tokens}) "
+                f"exceeds max_len {self.max_len}"
+            )
+        if self.bank is not None:
+            name = adapter if adapter is not None else self.adapter_names[0]
+            if name not in self._adapter_idx:
+                raise KeyError(f"unknown adapter {name!r}; have {self.adapter_names}")
+            adapter_idx = self._adapter_idx[name]
+        else:
+            if adapter is not None:
+                raise ValueError("engine was built without adapters")
+            adapter_idx = 0
+        with self._lock:
+            rid = self._next_rid
+            self._next_rid += 1
+            n_consumed = len(prompt) if self.prefill_mode == "oneshot" else 0
+            req = _Request(rid, prompt, max_new_tokens, adapter_idx, n_consumed)
+            self._pending.append(req)
+        return req.handle
+
+    def _pop_pending(self) -> Optional[_Request]:
+        with self._lock:
+            return self._pending.popleft() if self._pending else None
+
+    def _push_front(self, req: _Request) -> None:
+        with self._lock:
+            self._pending.appendleft(req)
+
+    def _has_pending(self) -> bool:
+        with self._lock:
+            return bool(self._pending)
+
+    # -- jitted steps (cached per bucket shape) -------------------------
+
+    def _paged_positions(self) -> List[bool]:
+        return [s.kind == "attn" for s in self.cfg.pattern]
+
+    def _decode_fn(self, bucket: int):
+        if bucket not in self._decode_fns:
+            cfg, r = self.cfg, self.r
+            impl, interp = self.kernel_impl, self.interpret
+            has_adapter = self.bank is not None
+            paged = self._paged_positions()
+
+            def fn(backbone, bank, user_idx, tokens, pools, bt, lengths, acache):
+                self.n_traces += 1  # executes at trace time only
+                B = tokens.shape[0]
+                pools_b = [
+                    e if is_attn else jax.tree.map(lambda t: t[:, :B], e)
+                    for e, is_attn in zip(pools, paged)
+                ]
+                if has_adapter:
+                    ab = gather_adapters(bank, user_idx)
+                    ac_b = jax.tree.map(lambda t: t[:, :B], acache)
+                else:
+                    ab, ac_b = None, None
+                logits, new_pools_b, new_ac_b = paged_pac_decode_step(
+                    backbone, ab, tokens, pools_b, bt, lengths, ac_b,
+                    cfg=cfg, r=r, kernel_impl=impl, interpret=interp,
+                )
+                new_pools = [
+                    nb if is_attn
+                    else jax.tree.map(
+                        lambda full, new: full.at[:, :B].set(new), e, nb)
+                    for e, nb, is_attn in zip(pools, new_pools_b, paged)
+                ]
+                new_acache = (
+                    jax.tree.map(
+                        lambda full, new: full.at[:, :B].set(new),
+                        acache, new_ac_b)
+                    if has_adapter else acache
+                )
+                return logits, new_pools, new_acache
+
+            self._decode_fns[bucket] = jax.jit(fn)
+        return self._decode_fns[bucket]
+
+    def _prefill_fn(self, bucket: int, s_pad: int):
+        key = (bucket, s_pad)
+        if key not in self._prefill_fns:
+            cfg, r, max_len = self.cfg, self.r, self.max_len
+            impl, interp = self.kernel_impl, self.interpret
+            has_adapter = self.bank is not None
+
+            def fn(backbone, bank, user_idx, tokens, lengths, pools, bt,
+                   acache, row_idx):
+                self.n_traces += 1
+                ab = gather_adapters(bank, user_idx) if has_adapter else None
+                logits, new_pools, acaches = paged_prefill(
+                    backbone, ab, tokens, lengths, pools, bt,
+                    cfg=cfg, max_len=max_len, r=r,
+                    kernel_impl=impl, interpret=interp,
+                )
+                if has_adapter:
+                    # row_idx of padding lanes is out of bounds on purpose:
+                    # mode="drop" discards their scatter
+                    acache = jax.tree.map(
+                        lambda full, new: full.at[:, row_idx].set(
+                            new, mode="drop"),
+                        acache, acaches,
+                    )
+                return logits, new_pools, acache
+
+            self._prefill_fns[key] = jax.jit(fn)
+        return self._prefill_fns[key]
+
+    # -- row-state bookkeeping (adapter cache + SSM states) -------------
+
+    def _move_row(self, src: int, dst: int) -> None:
+        move = lambda tree: jax.tree.map(lambda t: t.at[:, dst].set(t[:, src]), tree)
+        if self.acache is not None:
+            self.acache = move(self.acache)
+        self.pools = [
+            e if is_attn else move(e)
+            for e, is_attn in zip(self.pools, self._paged_positions())
+        ]
+
+    def _zero_row(self, row: int) -> None:
+        zero = lambda tree: jax.tree.map(
+            lambda t: t.at[:, row].set(jnp.zeros_like(t[:, row])), tree)
+        if self.acache is not None:
+            self.acache = zero(self.acache)
+        self.pools = [
+            e if is_attn else zero(e)
+            for e, is_attn in zip(self.pools, self._paged_positions())
+        ]
+
+    # -- admission ------------------------------------------------------
+
+    def _admit(self) -> None:
+        new_reqs: List[_Request] = []
+        row0 = len(self._active)
+        while len(self._active) < self.max_batch:
+            req = self._pop_pending()
+            if req is None:
+                break
+            if self.prefill_mode == "oneshot":
+                need = -(-len(req.prompt) // self.page)
+                if need > self.allocator.free_pages:
+                    self._push_front(req)  # not enough pages yet
+                    break
+                self.table.open(req.rid, len(req.prompt))
+            else:
+                if self.allocator.free_pages < 1:
+                    self._push_front(req)
+                    break
+                self.table.open(req.rid, 0)
+                self._zero_row(len(self._active))
+            self._active.append(req)
+            new_reqs.append(req)
+        if new_reqs and self.prefill_mode == "oneshot":
+            self._run_prefill(new_reqs, row0)
+
+    def _run_prefill(self, reqs: List[_Request], row0: int) -> None:
+        n = len(reqs)
+        bucket = _bucket(n, self.max_batch)
+        s_max = max(len(r.prompt) for r in reqs)
+        s_pad = _bucket(s_max, 1 << 30)
+        tokens = np.zeros((bucket, s_pad), np.int32)
+        user_idx = np.zeros(bucket, np.int32)
+        row_idx = np.full(bucket, self.max_batch, np.int32)  # OOB = dropped
+        for i, req in enumerate(reqs):
+            tokens[i, : len(req.prompt)] = req.prompt
+            user_idx[i] = req.adapter_idx
+            row_idx[i] = row0 + i
+        bt, lengths = self.table.dense([r.rid for r in reqs], rows=bucket)
+        fn = self._prefill_fn(bucket, s_pad)
+        logits, self.pools, self.acache = fn(
+            self.backbone, self.bank, user_idx, tokens, lengths,
+            self.pools, bt, self.acache, row_idx,
+        )
+        toks = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        for i, req in enumerate(reqs):
+            self._accept_token(req, int(toks[i]))
+
+    # -- the step loop --------------------------------------------------
+
+    def _accept_token(self, req: _Request, tok: int) -> None:
+        req.last_token = tok
+        req.n_generated += 1
+        req.handle._emit(tok)
+        if req.n_generated >= req.max_new or tok == self.eos_id:
+            req.finished = True
+
+    def _retire_finished(self) -> None:
+        for idx in range(len(self._active) - 1, -1, -1):
+            req = self._active[idx]
+            if not req.finished:
+                continue
+            last = len(self._active) - 1
+            if idx != last:  # swap-remove keeps rows a compact prefix
+                self._move_row(last, idx)
+                self._active[idx] = self._active[last]
+            self._active.pop()
+            self.table.close(req.rid)
+            req.handle._finish()
+
+    def step(self) -> bool:
+        """Admit pending requests and run one decode step for the whole
+        active batch. Returns True while any work remains."""
+        self._admit()
+        self._retire_finished()  # prefill alone may complete a request
+        if not self._active:
+            return self._has_pending()
+        n = len(self._active)
+        bucket = _bucket(n, self.max_batch)
+        rids = []
+        for req in self._active:
+            # page for the incoming token, before the dense export
+            self.table.extend_to(req.rid, self.table.length(req.rid) + 1)
+            rids.append(req.rid)
+        bt, lengths = self.table.dense(rids, rows=bucket)
+        tokens = np.zeros((bucket, 1), np.int32)
+        user_idx = np.zeros(bucket, np.int32)
+        for i, req in enumerate(self._active):
+            tokens[i, 0] = req.next_input()
+            user_idx[i] = req.adapter_idx
+        fn = self._decode_fn(bucket)
+        logits, self.pools, self.acache = fn(
+            self.backbone, self.bank, user_idx, tokens,
+            self.pools, bt, lengths, self.acache,
+        )
+        toks = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        for i, req in enumerate(self._active):
+            self.table.append_token(req.rid)
+            if req.advance():
+                continue  # stepwise prefill: prompt token consumed
+            self._accept_token(req, int(toks[i]))
+        for req in self._active:  # out of cache room → forced completion
+            if not req.finished and self.table.length(req.rid) >= self.max_len:
+                req.finished = True
+        self._retire_finished()
+        return bool(self._active) or self._has_pending()
+
+    def drain(self) -> None:
+        """Step until every submitted request has completed."""
+        while self.step():
+            pass
+
+    # -- background serving ---------------------------------------------
+
+    def start(self) -> None:
+        """Run the step loop in a daemon thread (idles when empty)."""
+        if self._thread is not None and self._thread.is_alive():
+            return
+        self._stop.clear()
+
+        def loop():
+            while not self._stop.is_set():
+                if not self.step():
+                    time.sleep(0.005)
+
+        self._thread = threading.Thread(target=loop, daemon=True)
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

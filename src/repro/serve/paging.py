@@ -1,0 +1,314 @@
+"""Paged KV cache: page pools, free-list allocator, page tables.
+
+The multi-tenant serving engine (`repro.serve.engine`) keeps every
+request's KV cache in fixed-size **pages** drawn from one global pool,
+so admission/completion never reshapes a device buffer — a request's
+cache is just the list of page ids its page-table row points at.
+
+Device side, one *pool* per attention pattern position (stacked over
+periods like `repro.models.backbone.init_cache`):
+
+* ``int8`` policy — pages live in block-absmax storage form,
+  ``{"q": int8 (n_p, n_pages, page, Hkv, hd),
+     "scale": f32 (n_p, n_pages, page, Hkv)}``
+  per K and V — the paper's Eq. 1 absmax quantization at per-(token,
+  kv-head) granularity, the same scheme as
+  `repro.models.layers.quantize_kv_token`. The payload is dequantized
+  **only** inside the attention kernels (in-VMEM); this module writes
+  pages but never reads them back to f32 (the palint ``storage-form``
+  rule pins that contract).
+* ``f32``/``bf16`` — plain arrays of the same page geometry, kept for
+  parity testing and as the byte-stability reference.
+
+Page id **0 is the null page**: allocators never hand it out, padded
+prompt positions and masked batch rows scatter their garbage there, and
+attention masks it out by position. Non-attention pattern positions
+(SSM layers in hybrid archs) are not paged — their O(1) per-request
+states live in per-slot rows (`init_state_rows`).
+
+Host side, :class:`PageAllocator` (a free list) and :class:`PageTable`
+(per-request page-id runs with a ragged ``indptr`` view and a dense
+``(B, max_pages)`` block-table export for the kernels) are plain
+Python — they run between decode steps, never inside jit.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import ssm
+
+KV_POLICIES = ("f32", "bf16", "int8")
+
+
+class OutOfPagesError(RuntimeError):
+    """The pool has no free page left — admit fewer/shorter requests."""
+
+
+# ---------------------------------------------------------------------------
+# Device pools
+# ---------------------------------------------------------------------------
+
+
+def quantize_kv_pages(t: jax.Array):
+    """Per-(token, kv-head) absmax INT8 over the last axis — the same
+    math as `repro.models.layers.quantize_kv_token`, shape-polymorphic
+    (t: (..., Hkv, hd) → int8 payload + f32 scale (..., Hkv))."""
+    absmax = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(absmax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def _attn_pool(cfg, n_pages: int, page: int, policy: str):
+    shape = (cfg.n_periods, n_pages, page, cfg.n_kv_heads, cfg.hd)
+    if policy == "int8":
+        entry = {
+            "q": jnp.zeros(shape, jnp.int8),
+            "scale": jnp.zeros(shape[:-1], jnp.float32),
+        }
+        return {"k": entry, "v": jax.tree.map(jnp.copy, entry)}
+    dtype = jnp.bfloat16 if policy == "bf16" else jnp.float32
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def init_state_rows(cfg, spec, n_slots: int):
+    """Per-slot recurrent state rows for one non-attention pattern
+    position, stacked over periods — (n_p, n_slots, ...) leaves."""
+    if spec.kind == "mamba":
+        single = ssm.init_mamba_cache(cfg, n_slots, jnp.float32)
+    elif spec.kind == "mlstm":
+        single = ssm.init_mlstm_cache(cfg, n_slots)
+    elif spec.kind == "slstm":
+        single = ssm.init_slstm_cache(cfg, n_slots)
+    else:
+        raise ValueError(spec.kind)
+    return jax.tree.map(
+        lambda t: jnp.broadcast_to(t[None], (cfg.n_periods,) + t.shape), single
+    )
+
+
+def init_pools(cfg, n_pages: int, page: int, n_slots: int, policy: str = "int8"):
+    """One pool entry per pattern position: paged KV for attention,
+    per-slot state rows for SSM kinds. ``n_pages`` includes the null
+    page (usable pages = n_pages - 1)."""
+    if policy not in KV_POLICIES:
+        raise ValueError(f"kv policy must be one of {KV_POLICIES}, got {policy!r}")
+    pools = []
+    for spec in cfg.pattern:
+        if spec.kind == "attn":
+            pools.append(_attn_pool(cfg, n_pages, page, policy))
+        else:
+            pools.append(init_state_rows(cfg, spec, n_slots))
+    return pools
+
+
+def is_paged_entry(entry) -> bool:
+    """True for an attention page pool ({"k": ..., "v": ...})."""
+    return isinstance(entry, dict) and set(entry) == {"k", "v"}
+
+
+def entry_page_size(entry) -> int:
+    leaf = entry["k"]["q"] if isinstance(entry["k"], dict) else entry["k"]
+    return leaf.shape[-3]
+
+
+# ---------------------------------------------------------------------------
+# Page writes (device, called inside the jitted steps)
+# ---------------------------------------------------------------------------
+
+
+def _scatter(pool: jax.Array, vals: jax.Array, pages: jax.Array, offs: jax.Array,
+             periods: bool):
+    """pool: (n_pages, page, ...) or — with ``periods`` — a leading n_p
+    axis; vals: matching (N, ...) / (n_p, N, ...). Duplicate (page, off)
+    targets (the null page) resolve arbitrarily — it holds garbage by
+    contract."""
+    if periods:
+        return pool.at[:, pages, offs].set(vals)
+    return pool.at[pages, offs].set(vals)
+
+
+def _token_coords(block_tables, lengths, page: int):
+    """Page/offset of the slot each request's *next* token lands in."""
+    max_pages = block_tables.shape[1]
+    rows = jnp.arange(block_tables.shape[0])
+    idx = jnp.minimum(lengths // page, max_pages - 1)
+    return block_tables[rows, idx], lengths % page
+
+
+def write_token_kv(entry, k, v, block_tables, lengths):
+    """Write one new token's K/V into the pages. ``entry`` is one
+    *period slice* of an attention pool (no leading n_p axis);
+    k, v: (B, 1, Hkv, hd) post-rope; lengths: (B,) write index.
+    Masked rows must point their block-table row at the null page."""
+    page = entry_page_size(entry)
+    pages, offs = _token_coords(block_tables, lengths, page)
+    k, v = k[:, 0], v[:, 0]  # (B, Hkv, hd)
+    if isinstance(entry["k"], dict):
+        kq, ks = quantize_kv_pages(k)
+        vq, vs = quantize_kv_pages(v)
+        return {
+            "k": {"q": _scatter(entry["k"]["q"], kq, pages, offs, False),
+                  "scale": _scatter(entry["k"]["scale"], ks, pages, offs, False)},
+            "v": {"q": _scatter(entry["v"]["q"], vq, pages, offs, False),
+                  "scale": _scatter(entry["v"]["scale"], vs, pages, offs, False)},
+        }
+    return {
+        "k": _scatter(entry["k"], k.astype(entry["k"].dtype), pages, offs, False),
+        "v": _scatter(entry["v"], v.astype(entry["v"].dtype), pages, offs, False),
+    }
+
+
+def write_prompt_kv(entry, k, v, block_tables, lengths):
+    """Scatter a whole prompt's K/V into the pages in one shot (the
+    prefill path). ``entry`` keeps its leading n_p axis; k, v:
+    (n_p, B, S, Hkv, hd); positions ``s >= lengths[b]`` (padding) go to
+    the null page."""
+    page = entry_page_size(entry)
+    n_p, B, S = k.shape[:3]
+    max_pages = block_tables.shape[1]
+    s_idx = jnp.arange(S)
+    pages = block_tables[
+        jnp.arange(B)[:, None], jnp.minimum(s_idx[None, :] // page, max_pages - 1)
+    ]
+    valid = s_idx[None, :] < lengths[:, None]
+    pages = jnp.where(valid, pages, 0)
+    offs = jnp.broadcast_to(s_idx % page, (B, S))
+    pages_f, offs_f = pages.reshape(-1), offs.reshape(-1)
+
+    def flat(t):
+        return t.reshape((n_p, B * S) + t.shape[3:])
+
+    if isinstance(entry["k"], dict):
+        kq, ks = quantize_kv_pages(k)
+        vq, vs = quantize_kv_pages(v)
+        return {
+            "k": {"q": _scatter(entry["k"]["q"], flat(kq), pages_f, offs_f, True),
+                  "scale": _scatter(entry["k"]["scale"], flat(ks), pages_f, offs_f, True)},
+            "v": {"q": _scatter(entry["v"]["q"], flat(vq), pages_f, offs_f, True),
+                  "scale": _scatter(entry["v"]["scale"], flat(vs), pages_f, offs_f, True)},
+        }
+    return {
+        "k": _scatter(entry["k"], flat(k.astype(entry["k"].dtype)), pages_f, offs_f, True),
+        "v": _scatter(entry["v"], flat(v.astype(entry["v"].dtype)), pages_f, offs_f, True),
+    }
+
+
+def kv_bytes_per_token(cfg, policy: str) -> int:
+    """HBM bytes one token's KV occupies across all attention layers —
+    the serving-memory figure the decode benchmark reports."""
+    n_attn = sum(1 for s in cfg.pattern if s.kind == "attn") * cfg.n_periods
+    width = {"f32": 4, "bf16": 2, "int8": 1}[policy]
+    per_layer = 2 * cfg.n_kv_heads * cfg.hd * width
+    if policy == "int8":
+        per_layer += 2 * cfg.n_kv_heads * 4  # f32 absmax scales
+    return n_attn * per_layer
+
+
+# ---------------------------------------------------------------------------
+# Host-side allocator + page table
+# ---------------------------------------------------------------------------
+
+
+class PageAllocator:
+    """Free-list block allocator over page ids ``1..n_pages-1`` (page 0
+    is the null page and is never handed out)."""
+
+    def __init__(self, n_pages: int):
+        if n_pages < 2:
+            raise ValueError("need at least 2 pages (one is the null page)")
+        self.n_pages = n_pages
+        self._free: List[int] = list(range(n_pages - 1, 0, -1))  # pop() -> low ids first
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise OutOfPagesError(
+                f"requested {n} pages, {len(self._free)} free")
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            if not 0 < p < self.n_pages:
+                raise ValueError(f"bad page id {p}")
+        self._free.extend(pages)
+
+
+class PageTable:
+    """Per-request page-id runs over a shared :class:`PageAllocator`.
+
+    Each open request owns an ordered page list (token ``t`` lives in
+    its ``t // page``-th page). :meth:`ragged` is the canonical
+    ``(indptr, pages)`` view; :meth:`dense` exports the rectangular
+    ``(B, max_pages)`` block table + lengths the kernels consume (rows
+    in the caller's order, unused entries = the null page)."""
+
+    def __init__(self, allocator: PageAllocator, page: int, max_pages: int):
+        self.allocator = allocator
+        self.page = page
+        self.max_pages = max_pages
+        self._pages: Dict[int, List[int]] = {}
+        self._len: Dict[int, int] = {}
+
+    def open(self, rid: int, n_tokens: int = 0) -> None:
+        if rid in self._pages:
+            raise ValueError(f"request {rid} already open")
+        self._pages[rid], self._len[rid] = [], 0
+        if n_tokens:
+            self.extend_to(rid, n_tokens)
+            self._len[rid] = n_tokens
+
+    def close(self, rid: int) -> None:
+        self.allocator.free(self._pages.pop(rid))
+        del self._len[rid]
+
+    def length(self, rid: int) -> int:
+        return self._len[rid]
+
+    def extend_to(self, rid: int, n_tokens: int) -> None:
+        """Grow the page run to cover ``n_tokens`` tokens (allocates)."""
+        need = -(-n_tokens // self.page)
+        if need > self.max_pages:
+            raise OutOfPagesError(
+                f"request {rid}: {n_tokens} tokens need {need} pages "
+                f"> max_pages {self.max_pages}")
+        have = len(self._pages[rid])
+        if need > have:
+            self._pages[rid].extend(self.allocator.alloc(need - have))
+
+    def append_token(self, rid: int) -> None:
+        """Account one more token, allocating a page on a boundary."""
+        self.extend_to(rid, self._len[rid] + 1)
+        self._len[rid] += 1
+
+    def ragged(self, rids: Optional[Sequence[int]] = None):
+        """(indptr (B+1,), pages (nnz,)) int32 — per-request page runs
+        concatenated, CSR style."""
+        rids = list(self._pages) if rids is None else list(rids)
+        indptr = np.zeros(len(rids) + 1, np.int32)
+        flat: List[int] = []
+        for i, rid in enumerate(rids):
+            flat.extend(self._pages[rid])
+            indptr[i + 1] = len(flat)
+        return indptr, np.asarray(flat, np.int32)
+
+    def dense(self, rids: Sequence[int], rows: Optional[int] = None
+              ) -> Tuple[np.ndarray, np.ndarray]:
+        """((rows, max_pages) block table, (rows,) lengths) int32 —
+        rows beyond ``len(rids)`` are null-page/zero-length padding."""
+        rows = len(rids) if rows is None else rows
+        bt = np.zeros((rows, self.max_pages), np.int32)
+        lengths = np.zeros(rows, np.int32)
+        for i, rid in enumerate(rids):
+            run = self._pages[rid]
+            bt[i, : len(run)] = run
+            lengths[i] = self._len[rid]
+        return bt, lengths

@@ -1,0 +1,147 @@
+"""Decode-path parity: the paged serving step (`repro.serve.decode`)
+against its two oracles, over ragged batches and every KV page policy.
+
+* ref vs pallas — the Pallas paged-attention kernel (interpret mode)
+  must match the gather-then-dense reference op for identical pools.
+* paged vs linear — the batched multi-adapter paged step at f32 KV must
+  reproduce the legacy single-request `pac_decode_step` path it
+  replaced (same greedy tokens, float-tolerance logits: the paged ref
+  masks by position instead of slicing, so reductions reorder).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.parallel_adapters import (
+    gather_adapters,
+    init_adapter,
+    init_adapter_cache,
+    stack_adapters,
+)
+from repro.core.quantization import quantize_tree
+from repro.core.steps import pac_decode_step
+from repro.serve import paging
+from repro.serve.decode import paged_pac_decode_step, paged_prefill
+
+PROMPTS = [[5, 7, 11, 2, 9], [3, 1], [8, 8, 4, 6]]  # ragged on purpose
+PAGE, MAX_LEN = 4, 16
+R = 4
+N_STEPS = 2
+#: |ref - pallas| logits ceiling per policy. f32/int8 share the exact
+#: dequant math (tiny float-reorder slack); bf16 rounds K/V storage.
+TOL = {"f32": 2e-4, "bf16": 3e-2, "int8": 2e-4}
+
+
+@pytest.fixture(scope="module")
+def serving_model(tiny_cfg, tiny_backbone, tiny_adapter):
+    """The serving configuration: INT8 backbone + two-adapter bank
+    gathered over the ragged batch."""
+    backbone = quantize_tree(tiny_backbone, bits=8, min_size=1024)
+    bank = stack_adapters(
+        [tiny_adapter, init_adapter(jax.random.PRNGKey(2), tiny_cfg, r=R)])
+    abatch = gather_adapters(bank, jnp.arange(len(PROMPTS)) % 2)
+    return backbone, abatch
+
+
+def _prefill(cfg, backbone, abatch, policy):
+    max_pages = MAX_LEN // PAGE
+    table = paging.PageTable(
+        paging.PageAllocator(len(PROMPTS) * max_pages + 1), PAGE, max_pages)
+    pools = paging.init_pools(
+        cfg, table.allocator.n_pages, PAGE, len(PROMPTS), policy)
+    for i, p in enumerate(PROMPTS):
+        table.open(i, len(p))
+    bt, lengths = table.dense(range(len(PROMPTS)))
+    S = max(len(p) for p in PROMPTS)
+    toks = np.zeros((len(PROMPTS), S), np.int32)
+    for i, p in enumerate(PROMPTS):
+        toks[i, : len(p)] = p
+    logits, pools, acache = paged_prefill(
+        backbone, abatch, jnp.asarray(toks), jnp.asarray(lengths), pools,
+        jnp.asarray(bt), cfg=cfg, max_len=MAX_LEN, r=R)
+    return table, pools, acache, logits
+
+
+@pytest.mark.parametrize("policy", ("f32", "bf16", "int8"))
+def test_ref_vs_pallas_paged_decode(policy, tiny_cfg, serving_model):
+    backbone, abatch = serving_model
+    table, pools, acache, logits = _prefill(tiny_cfg, backbone, abatch, policy)
+    step = {
+        impl: functools.partial(
+            paged_pac_decode_step, cfg=tiny_cfg, r=R, kernel_impl=impl,
+            interpret=True)
+        for impl in ("ref", "pallas")
+    }
+    tok = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)[:, None]
+    state = {impl: (pools, acache) for impl in step}
+    for _ in range(N_STEPS):
+        for i in range(len(PROMPTS)):
+            table.extend_to(i, table.length(i) + 1)
+        bt, lengths = table.dense(range(len(PROMPTS)))
+        bt, lengths = jnp.asarray(bt), jnp.asarray(lengths)
+        out = {}
+        for impl, fn in step.items():
+            lg, p2, a2 = fn(backbone, abatch, tok, *state[impl][:1], bt,
+                            lengths, state[impl][1])
+            out[impl] = np.asarray(lg[:, 0])
+            state[impl] = (p2, a2)
+        for i in range(len(PROMPTS)):
+            table.append_token(i)
+        err = np.max(np.abs(out["ref"] - out["pallas"]))
+        assert err < TOL[policy], f"{policy}: |ref-pallas| = {err:.3e}"
+        ref_tok = np.argmax(out["ref"], axis=-1)
+        assert (np.argmax(out["pallas"], axis=-1) == ref_tok).all()
+        tok = jnp.asarray(ref_tok, jnp.int32)[:, None]
+
+
+def test_paged_batch_matches_linear_singles_f32(tiny_cfg, serving_model):
+    """One batched paged step == N legacy single-request linear-cache
+    steps: same greedy tokens, logits within float-reorder slack."""
+    from repro.models import backbone as bb
+
+    backbone, abatch = serving_model
+    table, pools, acache, logits = _prefill(tiny_cfg, backbone, abatch, "f32")
+
+    adapters = [jax.tree.map(lambda t: t[i], abatch)
+                for i in range(len(PROMPTS))]
+    linear = []  # per request: logits after prompt, then N_STEPS greedy
+    for i, prompt in enumerate(PROMPTS):
+        cache = bb.init_cache(tiny_cfg, 1, MAX_LEN)
+        ac = init_adapter_cache(tiny_cfg, 1, MAX_LEN, r=R)
+        for pos, t in enumerate(prompt):
+            lg, cache, ac = pac_decode_step(
+                backbone, adapters[i], {"tokens": jnp.asarray([[t]], jnp.int32)},
+                cache, ac, pos, cfg=tiny_cfg, r=R)
+        seq = [np.asarray(lg[0, 0])]
+        for s in range(N_STEPS):
+            nxt = jnp.asarray([[np.argmax(seq[-1])]], jnp.int32)
+            lg, cache, ac = pac_decode_step(
+                backbone, adapters[i], {"tokens": nxt}, cache, ac,
+                len(prompt) + s, cfg=tiny_cfg, r=R)
+            seq.append(np.asarray(lg[0, 0]))
+        linear.append(seq)
+
+    pre = np.asarray(logits[:, 0])
+    for i in range(len(PROMPTS)):
+        assert np.max(np.abs(pre[i] - linear[i][0])) < 1e-4
+        assert np.argmax(pre[i]) == np.argmax(linear[i][0])
+
+    tok = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)[:, None]
+    for s in range(N_STEPS):
+        for i in range(len(PROMPTS)):
+            table.extend_to(i, table.length(i) + 1)
+        bt, lengths = table.dense(range(len(PROMPTS)))
+        lg, pools, acache = paged_pac_decode_step(
+            backbone, abatch, tok, pools, jnp.asarray(bt),
+            jnp.asarray(lengths), acache, cfg=tiny_cfg, r=R)
+        for i in range(len(PROMPTS)):
+            table.append_token(i)
+        got = np.asarray(lg[:, 0])
+        for i in range(len(PROMPTS)):
+            assert np.max(np.abs(got[i] - linear[i][1 + s])) < 1e-4
+            assert np.argmax(got[i]) == np.argmax(linear[i][1 + s])
+        tok = jnp.argmax(lg[:, 0], axis=-1).astype(jnp.int32)[:, None]

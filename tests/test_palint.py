@@ -220,6 +220,62 @@ def test_blockspec_vmem_budget_and_per_site_report(tmp_path):
     assert ok.ok
 
 
+def test_blockspec_unwraps_prefetch_scalar_grid_spec(tmp_path):
+    """grid_spec=PrefetchScalarGridSpec(...) sites get the same checks
+    as flat kwargs, with index_map arity = grid rank + num_scalar_prefetch."""
+    src = _PALLAS_HEADER + (
+        "from jax.experimental.pallas import tpu as pltpu\n"
+        "def launch(x):\n"
+        "    spec = pl.BlockSpec((8, 8), lambda i, j, bt: (bt[i], j))\n"
+        "    gs = pltpu.PrefetchScalarGridSpec(\n"
+        "        num_scalar_prefetch=1,\n"
+        "        grid=(2, 2),\n"
+        "        in_specs=[spec],\n"
+        "        out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, j)),\n"
+        "        scratch_shapes=[pltpu.VMEM((8, 8), jnp.float32)],\n"
+        "    )\n"
+        "    return pl.pallas_call(\n"
+        "        _k,\n"
+        "        grid_spec=gs,\n"
+        "        out_shape=jax.ShapeDtypeStruct((16, 16), jnp.float32),\n"
+        "    )(x)\n"
+    )
+    result = lint_tree(tmp_path, {"src/repro/kernels/k.py": src})
+    # the out_spec lambda takes 2 args but the site expects 2 + 1 prefetch
+    assert rules_fired(result) == {"pallas-blockspec"}
+    (finding,) = result.findings
+    assert "scalar-prefetch" in finding.message and "takes 2" in finding.message
+    (report,) = result.reports
+    assert report.data["num_scalar_prefetch"] == 1
+    assert report.data["grid_rank"] == 2
+    assert report.data["n_scratch"] == 1
+    # 2 blocks ×(8·8·4)×2 double-buffer + 8·8·4 scratch
+    assert report.data["vmem_bytes"] == 2 * 8 * 8 * 4 * 2 + 8 * 8 * 4
+
+
+def test_blockspec_assert_envelope_bounds_vmem_estimate(tmp_path):
+    """`assert dim <= N` declares a ceiling for a runtime-unpacked dim —
+    the VMEM estimate uses it (inexactly) instead of --assume-dim."""
+    src = _PALLAS_HEADER + (
+        "def launch(x):\n"
+        "    bm, bn = x.shape\n"
+        "    assert bm <= 8 and bn <= 16\n"
+        "    return pl.pallas_call(\n"
+        "        _k,\n"
+        "        grid=(2,),\n"
+        "        in_specs=[pl.BlockSpec((bm, bn), lambda i: (i, 0))],\n"
+        "        out_specs=pl.BlockSpec((bm, bn), lambda i: (i, 0)),\n"
+        "        out_shape=jax.ShapeDtypeStruct((16, 16), jnp.float32),\n"
+        "    )(x)\n"
+    )
+    result = lint_tree(tmp_path, {"src/repro/kernels/k.py": src})
+    assert result.ok, [f.render() for f in result.findings]
+    (report,) = result.reports
+    assert report.data["vmem_bytes"] == 2 * 8 * 16 * 4 * 2
+    assert report.data["exact"] is False
+    assert report.data["assumed_dims"] == []
+
+
 def test_blockspec_clean_site_reports_but_does_not_fire(tmp_path):
     result = lint_tree(tmp_path, {
         "src/repro/kernels/k.py": _PALLAS_HEADER + (
@@ -288,6 +344,20 @@ def test_storage_form_allows_kernels_and_cache(tmp_path):
     assert result.ok, [f.render() for f in result.findings]
 
 
+def test_storage_form_sanctions_paging_but_not_the_engine(tmp_path):
+    """The paged-KV pool owns quantise-on-write; the serving engine and
+    decode step must never widen an INT8 page outside the kernels."""
+    widen = (
+        "import jax.numpy as jnp\n"
+        "def widen(page):\n"
+        "    return page['q'].astype(jnp.float32) * page['scale']\n"
+    )
+    ok = lint_tree(tmp_path, {"src/repro/serve/paging.py": widen})
+    assert ok.ok, [f.render() for f in ok.findings]
+    bad = lint_tree(tmp_path, {"src/repro/serve/engine.py": widen})
+    assert rules_fired(bad) == {"storage-form"}
+
+
 # ---------------------------------------------------------- bench-schema
 
 
@@ -311,6 +381,28 @@ def test_bench_schema_flags_missing_and_mistyped_keys(tmp_path):
     result = lint_tree(tmp_path, {"BENCH_bad.json": json.dumps(bad)})
     assert rules_fired(result) == {"bench-schema"}
     assert len(result.findings) == 2
+
+
+def test_bench_schema_per_file_required_keys(tmp_path):
+    """The serving bench additionally needs page geometry and the
+    per-policy breakdown; rate fields must be numeric."""
+    good = dict(GOOD_BENCH, page_size=8, policies={
+        "int8": {"kv_bytes_per_token": 544, "ref_tokens_per_s": 100.0},
+    })
+    ok = lint_tree(tmp_path / "good", {
+        "BENCH_decode_step.json": json.dumps(good),
+        # the per-file keys do not leak onto other records
+        "BENCH_other.json": json.dumps(GOOD_BENCH),
+    })
+    assert ok.ok, [f.render() for f in ok.findings]
+
+    bad = dict(GOOD_BENCH, policies={
+        "int8": {"kv_bytes_per_token": "544", "ref_tokens_per_s": "fast"},
+    })  # page_size missing, both rate/footprint fields stringly typed
+    result = lint_tree(tmp_path / "bad",
+                       {"BENCH_decode_step.json": json.dumps(bad)})
+    assert rules_fired(result) == {"bench-schema"}
+    assert len(result.findings) == 3
 
 
 # ----------------------------------------------------------- suppression

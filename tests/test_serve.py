@@ -1,0 +1,183 @@
+"""Serving layer: allocator/page-table bookkeeping, INT8 page round
+trips, and the multi-tenant engine acceptance gate — a continuously
+batched B-adapter run over paged INT8 KV must produce the same greedy
+streams as B independent single-request runs.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serve import (
+    OutOfPagesError,
+    PageAllocator,
+    PageTable,
+    ServeEngine,
+    kv_bytes_per_token,
+)
+from repro.serve.paging import quantize_kv_pages
+
+
+# ---------------------------------------------------------------- paging
+
+
+def test_allocator_never_hands_out_the_null_page():
+    a = PageAllocator(5)
+    got = a.alloc(4)
+    assert sorted(got) == [1, 2, 3, 4]
+    assert a.free_pages == 0
+    with pytest.raises(OutOfPagesError):
+        a.alloc(1)
+    a.free([2, 3])
+    assert sorted(a.alloc(2)) == [2, 3]
+    with pytest.raises(ValueError):
+        a.free([0])  # the null page is not the allocator's to recycle
+
+
+def test_page_table_growth_and_release():
+    table = PageTable(PageAllocator(8), page=4, max_pages=3)
+    table.open(7, n_tokens=5)          # 5 tokens -> 2 pages
+    assert table.length(7) == 5
+    indptr, flat = table.ragged([7])
+    assert list(indptr) == [0, 2] and len(flat) == 2
+    table.extend_to(7, 6)              # idempotent within the same page
+    for _ in range(3):
+        table.append_token(7)          # crosses into page 3 at token 9
+    assert table.length(7) == 8
+    bt, lengths = table.dense([7], rows=2)
+    assert bt.shape == (2, 3) and lengths[0] == 8
+    assert (bt[1] == 0).all() and lengths[1] == 0   # padding row -> null page
+    with pytest.raises(OutOfPagesError):
+        table.extend_to(7, 13)         # 4 pages > max_pages
+    free_before = table.allocator.free_pages
+    table.close(7)
+    assert table.allocator.free_pages == free_before + 2
+    with pytest.raises(KeyError):
+        table.length(7)
+
+
+def test_page_table_rejects_double_open():
+    table = PageTable(PageAllocator(4), page=4, max_pages=2)
+    table.open(0)
+    with pytest.raises(ValueError):
+        table.open(0)
+
+
+def test_int8_page_round_trip_accuracy():
+    t = jax.random.normal(jax.random.PRNGKey(0), (6, 4, 32))
+    q, scale = quantize_kv_pages(t)
+    assert q.dtype == jnp.int8 and scale.shape == (6, 4)
+    back = q.astype(jnp.float32) * scale[..., None]
+    err = jnp.max(jnp.abs(back - t)) / jnp.max(jnp.abs(t))
+    assert err < 1 / 127  # absmax quantization: one step of the grid
+
+
+def test_kv_bytes_per_token_orders_policies(tiny_cfg):
+    f32, bf16, int8 = (kv_bytes_per_token(tiny_cfg, p)
+                       for p in ("f32", "bf16", "int8"))
+    assert f32 == 2 * bf16
+    assert int8 < bf16 < f32  # int8 pays +4B/head scale but stays smallest
+
+
+# ---------------------------------------------------------------- engine
+
+
+PROMPTS = [[5, 7, 11, 2, 9], [3, 1], [8, 8, 4, 6], [2, 2, 2]]
+USERS = ["alice", "bob", "alice", "bob"]
+
+
+@pytest.fixture(scope="module")
+def adapters(tiny_cfg):
+    from repro.core.parallel_adapters import init_adapter
+
+    return {
+        "alice": init_adapter(jax.random.PRNGKey(1), tiny_cfg, r=4),
+        "bob": init_adapter(jax.random.PRNGKey(2), tiny_cfg, r=4),
+    }
+
+
+def _engine(tiny_backbone, tiny_cfg, adapters, **kw):
+    base = dict(r=4, kernel_impl="ref", kv_policy="int8", page_size=4,
+                max_len=32, max_batch=2)
+    base.update(kw)
+    return ServeEngine(tiny_backbone, tiny_cfg, adapters, **base)
+
+
+def _singles(tiny_backbone, tiny_cfg, adapters, n_new, **kw):
+    outs = []
+    for p, u in zip(PROMPTS, USERS):
+        eng = _engine(tiny_backbone, tiny_cfg, adapters, max_batch=1, **kw)
+        h = eng.submit(p, u, max_new_tokens=n_new)
+        eng.drain()
+        outs.append(h.result())
+    return outs
+
+
+def test_batched_multi_adapter_equals_single_request_streams(
+        tiny_backbone, tiny_cfg, adapters):
+    """The acceptance gate: 4 requests / 2 adapters continuously batched
+    (max_batch=2 forces admission waves and swap-remove retirement) over
+    paged INT8 KV through the Pallas kernel == the same requests served
+    one at a time."""
+    eng = _engine(tiny_backbone, tiny_cfg, adapters, kernel_impl="pallas")
+    handles = [eng.submit(p, u, max_new_tokens=5)
+               for p, u in zip(PROMPTS, USERS)]
+    eng.drain()
+    batched = [h.result() for h in handles]
+    assert batched == _singles(tiny_backbone, tiny_cfg, adapters, 5,
+                               kernel_impl="pallas")
+    assert all(len(r) == 5 for r in batched)
+
+
+def test_staggered_admission_matches_upfront_submission(
+        tiny_backbone, tiny_cfg, adapters):
+    """Joining a half-decoded batch must not perturb resident requests."""
+    eng = _engine(tiny_backbone, tiny_cfg, adapters, max_batch=4)
+    h0 = eng.submit(PROMPTS[0], USERS[0], max_new_tokens=6)
+    for _ in range(2):
+        eng.step()
+    late = [eng.submit(p, u, max_new_tokens=6)
+            for p, u in zip(PROMPTS[1:], USERS[1:])]
+    eng.drain()
+    got = [h0.result()] + [h.result() for h in late]
+    assert got == _singles(tiny_backbone, tiny_cfg, adapters, 6)
+
+
+def test_streaming_thread_and_handle_generator(
+        tiny_backbone, tiny_cfg, adapters):
+    eng = _engine(tiny_backbone, tiny_cfg, adapters, kv_policy="f32",
+                  max_batch=4)
+    eng.start()
+    try:
+        hs = [eng.submit(p, u, max_new_tokens=4)
+              for p, u in zip(PROMPTS[:3], USERS[:3])]
+        streamed = [list(h.tokens()) for h in hs]
+    finally:
+        eng.stop()
+    assert streamed == _singles(tiny_backbone, tiny_cfg, adapters, 4,
+                                kv_policy="f32")[:3]
+
+
+def test_warm_buckets_do_not_retrace(tiny_backbone, tiny_cfg, adapters):
+    """Admission waves reuse the size-bucketed jitted steps: a second
+    identical wave of work compiles nothing new."""
+    eng = _engine(tiny_backbone, tiny_cfg, adapters, max_batch=4)
+    for p, u in zip(PROMPTS, USERS):
+        eng.submit(p, u, max_new_tokens=4)
+    eng.drain()
+    warm = eng.n_traces
+    assert warm > 0
+    for p, u in zip(PROMPTS, USERS):
+        eng.submit(p, u, max_new_tokens=4)
+    eng.drain()
+    assert eng.n_traces == warm
+
+
+def test_submit_validates_against_engine_limits(
+        tiny_backbone, tiny_cfg, adapters):
+    eng = _engine(tiny_backbone, tiny_cfg, adapters)
+    with pytest.raises(ValueError):
+        eng.submit(list(range(40)), "alice", max_new_tokens=1)  # > max_len
+    with pytest.raises(KeyError):
+        eng.submit([1, 2], "mallory", max_new_tokens=2)  # unknown adapter

@@ -259,7 +259,46 @@ def build_env_for(call: ast.Call, func: ast.FunctionDef,
         elif isinstance(node, ast.AnnAssign) and isinstance(node.target, ast.Name) \
                 and node.value is not None:
             env.set(node.target.id, eval_const(node.value, env))
+        elif isinstance(node, ast.Assert):
+            _assert_bounds(node.test, env)
     return env
+
+
+def _assert_bounds(test: ast.AST, env: ConstEnv) -> None:
+    """Harvest upper bounds from envelope asserts.
+
+    ``assert page <= 64 and hd <= 256`` declares the supported envelope
+    of a dim that is otherwise unpacked from a runtime shape — for a
+    still-unknown name, the bound becomes its (inexact) value, so VMEM
+    estimates use the declared ceiling instead of the global assumption.
+    """
+    tests = test.values if isinstance(test, ast.BoolOp) \
+        and isinstance(test.op, ast.And) else [test]
+    for t in tests:
+        if not isinstance(t, ast.Compare):
+            continue
+        left = t.left
+        for op, comp in zip(t.ops, t.comparators):
+            if isinstance(op, (ast.LtE, ast.Lt)) and isinstance(left, ast.Name):
+                v, _ = eval_const(comp, env)
+                if v is not None and env.get(left.id)[0] is None:
+                    bound = v - 1 if isinstance(op, ast.Lt) else v
+                    env.set(left.id, (bound, False))
+            left = comp
+
+
+def _list_value_elts(value: ast.AST) -> Optional[list]:
+    """Element ASTs of a list-valued expression: a literal, or the
+    ``[spec] * n`` replication idiom."""
+    if isinstance(value, (ast.List, ast.Tuple)):
+        return list(value.elts)
+    if isinstance(value, ast.BinOp) and isinstance(value.op, ast.Mult):
+        for lst, n in ((value.left, value.right), (value.right, value.left)):
+            if isinstance(lst, (ast.List, ast.Tuple)) \
+                    and isinstance(n, ast.Constant) \
+                    and isinstance(n.value, int):
+                return list(lst.elts) * n.value
+    return None
 
 
 def collect_list_parts(name: str, call: ast.Call, func: ast.FunctionDef) -> Optional[list]:
@@ -270,7 +309,7 @@ def collect_list_parts(name: str, call: ast.Call, func: ast.FunctionDef) -> Opti
         specs = [A, B]
         if cond:
             specs.append(C)
-        specs += [D]
+        specs += [D] * 2
 
     Conditional appends are *included* (superset — the conservative
     direction for a VMEM upper bound).
@@ -283,28 +322,39 @@ def collect_list_parts(name: str, call: ast.Call, func: ast.FunctionDef) -> Opti
         if isinstance(node, ast.Assign) and len(node.targets) == 1 \
                 and isinstance(node.targets[0], ast.Name) \
                 and node.targets[0].id == name:
-            if isinstance(node.value, (ast.List, ast.Tuple)):
-                parts = list(node.value.elts)
-            else:
-                parts = None
+            parts = _list_value_elts(node.value)
         elif isinstance(node, ast.AugAssign) and isinstance(node.target, ast.Name) \
                 and node.target.id == name and parts is not None:
-            if isinstance(node.value, (ast.List, ast.Tuple)):
-                parts.extend(node.value.elts)
-            else:
-                parts = None
+            elts = _list_value_elts(node.value)
+            parts = parts + elts if elts is not None else None
         elif isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute) \
                 and node.func.attr in ("append", "extend") \
                 and isinstance(node.func.value, ast.Name) \
                 and node.func.value.id == name and parts is not None:
             if node.func.attr == "append" and len(node.args) == 1:
                 parts.append(node.args[0])
-            elif node.func.attr == "extend" and len(node.args) == 1 \
-                    and isinstance(node.args[0], (ast.List, ast.Tuple)):
-                parts.extend(node.args[0].elts)
+            elif node.func.attr == "extend" and len(node.args) == 1:
+                elts = _list_value_elts(node.args[0])
+                parts = parts + elts if elts is not None else None
             else:
                 parts = None
     return parts
+
+
+def resolve_name(node: ast.AST, call: ast.Call, func: Optional[ast.AST]) -> ast.AST:
+    """Follow a ``Name`` to its last straight-line assignment before
+    ``call`` in ``func``'s scope; non-Names pass through unchanged."""
+    if not isinstance(node, ast.Name) or func is None:
+        return node
+    value = node
+    for stmt in scope_nodes(func):
+        if getattr(stmt, "lineno", 0) >= call.lineno:
+            continue
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                and isinstance(stmt.targets[0], ast.Name) \
+                and stmt.targets[0].id == node.id:
+            value = stmt.value
+    return value
 
 
 #: dtype name → byte width, for VMEM footprint arithmetic.

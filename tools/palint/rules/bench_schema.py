@@ -22,8 +22,16 @@ REQUIRED = {
     "seq": int,
 }
 
+#: extra required keys for specific records, by basename — the serving
+#: bench is meaningless without the page geometry and the per-policy
+#: breakdown it exists to compare
+REQUIRED_BY_NAME = {
+    "BENCH_decode_step.json": {"page_size": int, "policies": dict},
+}
+
 #: nested keys matching any of these predicates must be numeric
-_NUMERIC_SUFFIXES = ("_ms", "_s", "_mb", "_bytes", "_bytes_per_batch")
+_NUMERIC_SUFFIXES = ("_ms", "_s", "_mb", "_bytes", "_bytes_per_batch",
+                     "_per_s", "_per_token")
 _NUMERIC_EXACT = {"ms", "batch", "seq", "bm", "bn", "bk", "bits", "steps"}
 _NUMERIC_PREFIXES = ("ratio_", "loss_")
 
@@ -64,7 +72,9 @@ class BenchSchemaRule(Rule):
             yield Finding(self.name, rel, 0,
                           "benchmark record must be a JSON object")
             return
-        for key, typ in REQUIRED.items():
+        basename = rel.rsplit("/", 1)[-1]
+        required = dict(REQUIRED, **REQUIRED_BY_NAME.get(basename, {}))
+        for key, typ in required.items():
             if key not in data:
                 yield Finding(
                     self.name, rel, 0,

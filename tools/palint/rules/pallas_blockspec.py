@@ -37,6 +37,7 @@ from tools.palint.astutil import (
     eval_const,
     last_segment,
     module_env,
+    resolve_name,
 )
 from tools.palint.engine import Context, Finding, PyModule, Report, Rule, register
 
@@ -111,7 +112,13 @@ def _spec_list(node: Optional[ast.AST], module: PyModule,
     if isinstance(node, (ast.Tuple, ast.List)):
         return list(node.elts)
     if isinstance(node, ast.Name) and func is not None:
-        return collect_list_parts(node.id, call, func)
+        parts = collect_list_parts(node.id, call, func)
+        if parts is not None:
+            return parts
+        resolved = resolve_name(node, call, func)
+        if isinstance(resolved, ast.Call):
+            return [resolved]  # a Name bound to one BlockSpec
+        return None
     return [node]  # single spec
 
 
@@ -185,6 +192,25 @@ class PallasBlockSpecRule(Rule):
         assume = ctx.assume_dim
 
         kwargs = {kw.arg: kw.value for kw in call.keywords if kw.arg}
+
+        # a grid_spec= bundle (PrefetchScalarGridSpec / GridSpec) carries
+        # grid/in_specs/out_specs/scratch_shapes inside the constructor —
+        # unwrap it so those sites get the same checks as flat kwargs.
+        # num_scalar_prefetch shifts every index_map's expected arity: the
+        # prefetched scalar refs are appended after the grid indices.
+        n_prefetch = 0
+        gs_node = resolve_name(kwargs.pop("grid_spec", None), call, func)
+        if isinstance(gs_node, ast.Call) and last_segment(
+                module.imports.resolve(gs_node.func)) in (
+                "PrefetchScalarGridSpec", "GridSpec"):
+            for kw in gs_node.keywords:
+                if kw.arg == "num_scalar_prefetch":
+                    v, _ = eval_const(kw.value, env)
+                    n_prefetch = int(v) if v else 0
+                elif kw.arg in ("grid", "in_specs", "out_specs",
+                                "scratch_shapes"):
+                    kwargs.setdefault(kw.arg, kw.value)
+
         grid_node = kwargs.get("grid")
         grid_rank: Optional[int] = None
         grid_dims: List[Optional[float]] = []
@@ -207,21 +233,27 @@ class PallasBlockSpecRule(Rule):
         specs = []  # (role, index, _Spec)
         for role, nodes in (("in", in_nodes or []), ("out", out_nodes or [])):
             for i, n in enumerate(nodes):
-                s = _parse_blockspec(n, module, env, assume)
+                s = _parse_blockspec(
+                    resolve_name(n, call, func), module, env, assume)
                 if s is not None:
                     if role == "out" and i < len(out_meta):
                         s.width = out_meta[i][0]
                     specs.append((role, i, s))
 
-        # -- index_map arity vs grid rank ---------------------------------
+        # -- index_map arity vs grid rank (+ scalar-prefetch refs) ---------
         if grid_rank is not None:
+            want = grid_rank + n_prefetch
+            why = (f"the grid has rank {grid_rank} and "
+                   f"{n_prefetch} scalar-prefetch operand(s) follow the "
+                   "program ids" if n_prefetch else
+                   f"the grid has rank {grid_rank} — Pallas passes one "
+                   "program id per grid dim")
             for role, i, s in specs:
-                if s.arity is not None and s.arity != grid_rank:
+                if s.arity is not None and s.arity != want:
                     yield Finding(
                         self.name, module.rel, call.lineno,
                         f"{role}_specs[{i}]: index_map takes {s.arity} "
-                        f"argument(s) but the grid has rank {grid_rank} — "
-                        "Pallas passes one program id per grid dim",
+                        f"argument(s) but {why}",
                         col=call.col_offset,
                     )
 
@@ -289,6 +321,7 @@ class PallasBlockSpecRule(Rule):
             "n_in_specs": len(in_nodes) if in_nodes is not None else None,
             "n_out_specs": len(out_nodes) if out_nodes is not None else None,
             "n_scratch": n_scratch,
+            "num_scalar_prefetch": n_prefetch,
             "vmem_bytes": total,
             "vmem_kib": round(total / 1024, 1),
             "budget_bytes": budget,

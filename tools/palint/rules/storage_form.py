@@ -10,8 +10,9 @@ a silent 4× traffic regression, not a test failure.
 
 Sanctioned sites: ``src/repro/kernels/`` (the kernels themselves and
 their ref oracle), ``src/repro/core/activation_cache.py`` (the cache
-owns its entries' lifecycle) and ``src/repro/core/quantization.py``
-(defines the primitives).
+owns its entries' lifecycle), ``src/repro/core/quantization.py``
+(defines the primitives) and ``src/repro/serve/paging.py`` (the paged
+KV pool, which owns the quantise-on-write side of the same contract).
 """
 
 from __future__ import annotations
@@ -25,6 +26,10 @@ ALLOWED_PREFIXES = (
     "src/repro/kernels/",
     "src/repro/core/activation_cache.py",
     "src/repro/core/quantization.py",
+    # paged INT8 KV pages reuse the {"q","scale"} storage form; the page
+    # pool owns quantise-on-write, the kernels own dequantise-on-read —
+    # the engine and decode step in between must never widen a page
+    "src/repro/serve/paging.py",
 )
 _KEYS = {"q", "scale"}
 
