@@ -656,7 +656,8 @@ class CachePrefetcher:
         self._q: queue.Queue = queue.Queue(maxsize=max(1, depth))
         self._err: Optional[BaseException] = None
         self._stop = threading.Event()
-        self._done = False  # consumer saw the _DONE sentinel
+        self._done = False    # consumer saw the _DONE sentinel
+        self._closed = False  # close() ran — iteration must fail fast
         self._thread = threading.Thread(
             target=self._worker, name="activation-cache-prefetch", daemon=True
         )
@@ -685,6 +686,14 @@ class CachePrefetcher:
         return self
 
     def __next__(self):
+        if self._closed:
+            # after close() the queue is drained and the worker is gone —
+            # a blocking get() here would hang forever. Elastic resharding
+            # (repro.fleet) closes mid-epoch and re-opens over the
+            # remaining order; a stale iterator must fail loudly instead.
+            raise RuntimeError(
+                "CachePrefetcher iterated after close(); open a new "
+                "prefetcher over the remaining key batches")
         item = self._q.get()
         if item is self._DONE:
             self._done = True
@@ -707,6 +716,7 @@ class CachePrefetcher:
         (early exit / exception) and after normal exhaustion. Unlike
         iteration, a worker error is swallowed here — close() is for
         unwinding, not for results."""
+        self._closed = True
         self._stop.set()
         while not self._done:
             try:

@@ -401,6 +401,11 @@ class HybridParallelismPlanner:
         self.het = heterogeneity_aware
         self._h_cache: dict = {}
         self._w_cache: dict = {}
+        # the device subset the current plan() call may use, as absolute
+        # indices into self.devices — plan(available=...) re-plans after a
+        # pool-membership change without rebuilding the planner, and the
+        # Eq. (4) memo (keyed on absolute-index groups) carries over
+        self._avail: Tuple[int, ...] = tuple(range(len(self.devices)))
 
     # -- Eq. (4): sample dispatch inside one stage --------------------------
     def _device_time(self, d: DeviceProfile, x: int, y: int, b: int) -> float:
@@ -447,12 +452,15 @@ class HybridParallelismPlanner:
 
     # -- Eq. (3): balanced pipeline partition --------------------------------
     def _w(self, y: int, n: int, s: int):
-        """W(0→y, D_n, s): (slowest-stage time, config list)."""
-        key = (y, n, s)
+        """W(0→y, first n of the available devices, s stages):
+        (slowest-stage time, config list). Groups are tuples of absolute
+        device indices, so the Eq. (4) memo survives ``available=``
+        subset changes."""
+        key = (y, n, s, self._avail)
         if key in self._w_cache:
             return self._w_cache[key]
         if s == 1:
-            group = tuple(range(n))
+            group = self._avail[:n]
             t, split = self.stage_dispatch(0, y, group, self.B)
             cfgs = [(0, y, group, split)]
             self._w_cache[key] = (t, cfgs)
@@ -460,7 +468,7 @@ class HybridParallelismPlanner:
         best, best_cfg = INF, None
         for q in range(s - 2, y):  # at least s-1 layers before the last stage
             for m in range(1, n - (s - 1) + 1):
-                group = tuple(range(n - m, n))
+                group = self._avail[n - m : n]
                 t_stage, split = self.stage_dispatch(q + 1, y, group, self.B)
                 if t_stage >= best:
                     continue
@@ -508,8 +516,26 @@ class HybridParallelismPlanner:
         )
         return L_b, L_e, L_n, stages
 
-    def plan(self, max_stages: Optional[int] = None) -> Plan:
-        n = len(self.devices)
+    def plan(self, max_stages: Optional[int] = None,
+             available: Optional[Sequence[int]] = None) -> Plan:
+        """σ-optimal plan over the pool — or, with ``available=`` (absolute
+        device indices), over a surviving subset: the fleet scheduler's
+        incremental re-plan after a device is lost or joins. Eq. (4)
+        dispatch results are memoized on absolute-index groups, so
+        re-planning a subset reuses every group the two pools share."""
+        if available is None:
+            self._avail = tuple(range(len(self.devices)))
+        else:
+            avail = tuple(int(i) for i in available)
+            if len(set(avail)) != len(avail):
+                raise ValueError(f"available has duplicates: {avail}")
+            bad = [i for i in avail if i < 0 or i >= len(self.devices)]
+            if bad or not avail:
+                raise ValueError(
+                    f"available must be non-empty indices into the "
+                    f"{len(self.devices)}-device pool, got {avail}")
+            self._avail = avail
+        n = len(self._avail)
         best: Optional[Plan] = None
         smax = min(self.L, n, max_stages or n)
         for s in range(1, smax + 1):

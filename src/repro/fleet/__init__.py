@@ -1,0 +1,59 @@
+"""Fleet scheduling: many fine-tuning jobs on one shared edge pool.
+
+The paper evaluates one job on a dedicated, reliable pool. Production
+(ROADMAP item 3; the federated fine-tuning survey, arXiv 2503.12016) is
+N users' jobs arriving continuously on a shared, *flaky* fleet —
+heterogeneous devices that join, leave, slow down, and die without
+warning. This package builds the online layer on top of the existing
+planner and runtime:
+
+* :mod:`~repro.fleet.clock` — a deterministic simulation clock, so every
+  failure path replays identically in CI (no wall-clock flakiness).
+* :mod:`~repro.fleet.events` — :class:`FaultPlan`: scripted
+  join/leave/slow/kill/submit events at step boundaries (seedable random
+  plans for property tests), behind the :class:`PoolEvents` source
+  protocol.
+* :mod:`~repro.fleet.pool` — :class:`DevicePool`: fleet membership,
+  heartbeats (a killed device stops heartbeating and is detected after a
+  deterministic timeout), straggler speed factors, and the mapping from
+  member names to JAX devices.
+* :mod:`~repro.fleet.elastic` — :class:`ElasticDpRunner`: the elastic
+  pure-DP cached train step. Cached epochs have no backbone forward, so
+  device loss is a *resharding* problem: work moves between members with
+  **bit-identical** numerics under any layout (canonical-order chunk
+  accumulation — the property the kill-mid-epoch test pins exactly).
+* :mod:`~repro.fleet.job` — :class:`SessionJob`: one fine-tuning job
+  (an :class:`~repro.runtime.EdgeSession` driven step-by-step) with
+  checkpointed preemption via the session's snapshot/restore seam.
+* :mod:`~repro.fleet.scheduler` — :class:`FleetScheduler`: the job
+  queue. Admission, planner-priced placement onto device subsets,
+  re-planning on every membership change, quantum-based preemption so a
+  full pool never starves the queue.
+
+CLI: ``python -m repro.launch.fleet --simulate`` (docs/CLI.md).
+"""
+
+from repro.fleet.clock import SimClock
+from repro.fleet.events import FaultPlan, FleetEvent, PoolEvents, ScriptedEvents
+from repro.fleet.pool import DeviceMember, DevicePool
+from repro.fleet.elastic import ElasticDpRunner, assign_chunks, slice_cached
+from repro.fleet.job import SessionJob
+from repro.fleet.scheduler import FleetReport, FleetScheduler, Placement, TickRecord
+
+__all__ = [
+    "SimClock",
+    "FaultPlan",
+    "FleetEvent",
+    "PoolEvents",
+    "ScriptedEvents",
+    "DeviceMember",
+    "DevicePool",
+    "ElasticDpRunner",
+    "assign_chunks",
+    "slice_cached",
+    "SessionJob",
+    "FleetScheduler",
+    "FleetReport",
+    "Placement",
+    "TickRecord",
+]

@@ -1,0 +1,219 @@
+"""ElasticDpRunner — the elastic pure-DP cached train step.
+
+Cached epochs are pure data parallelism over activation-cache entries
+(no backbone forward), so fleet membership changes are a *resharding*
+problem: move work units between devices, replay nothing. The runner
+makes resharding **numerically invisible** by construction:
+
+* The work unit is a fixed-size **chunk** of the global batch (default
+  one sequence). Each chunk produces its CE parts and the gradient of
+  its CE numerator — ``(num_i, den_i, ∇num_i)`` — on whichever member
+  device owns it this step.
+* Results are accumulated on the host **in canonical chunk order**
+  (0, 1, 2, …), never in device order. Float addition is performed in
+  one fixed association, so *any* assignment of chunks to *any* member
+  set yields bit-identical sums — the property the kill-mid-epoch
+  simulation test asserts as exact float equality.
+* The adapter update then runs once:
+  ``loss = Σnum/Σden``, ``grads = Σ∇num/Σden`` (the denominator is the
+  token count, independent of the adapter), followed by the same
+  clip + AdamW the single-device cached step uses — the identical math
+  of :func:`repro.core.steps.pac_cached_train_step`, reassociated at
+  chunk granularity.
+
+Contrast with :func:`repro.core.steps.dp_cached_train_step`: the
+shard_map twin is the fast path for a *fixed* mesh (one jitted psum),
+but its reduction tree follows the dp layout, so growing or shrinking
+the mesh perturbs float sums. The fleet runner trades one host sync per
+chunk for layout-independence — on an edge fleet the chunks are whole
+sequences on devices linked by LAN, so the sync is not the bottleneck,
+and determinism is what makes elastic membership *testable*.
+
+Each member holds a **backbone replica** on its device (`device_put` at
+placement time — growing onto a joined device ships weights, never
+recomputes activations). The adapter is re-replicated every step (it
+just changed); it is 1/r²-sized, the paper's asymmetry.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+def assign_chunks(n_chunks: int, n_members: int,
+                  weights: Optional[Sequence[float]] = None) -> List[int]:
+    """Deterministic proportional chunk counts per member.
+
+    Largest-remainder rounding of ``n_chunks · w_i/Σw`` with ties broken
+    by member order — the planner-free fallback for chunk dispatch (the
+    scheduler normally prices shares with Eq. (4) via
+    :meth:`~repro.fleet.job.SessionJob.plan_shares`)."""
+    if n_members < 1:
+        raise ValueError("need at least one member")
+    w = [1.0] * n_members if weights is None else [float(x) for x in weights]
+    if len(w) != n_members or any(x < 0 for x in w) or sum(w) <= 0:
+        raise ValueError(f"bad weights {w} for {n_members} members")
+    total = sum(w)
+    raw = [n_chunks * x / total for x in w]
+    counts = [int(r) for r in raw]
+    order = sorted(range(n_members), key=lambda i: (-(raw[i] - counts[i]), i))
+    for i in order[: n_chunks - sum(counts)]:
+        counts[i] += 1
+    return counts
+
+
+def slice_cached(cached: dict, lo: int, hi: int) -> dict:
+    """Rows ``[lo, hi)`` of a cached training batch. ``taps`` carry the
+    batch on axis 1 (``(n_p, B, S, d)``); every other entry (b0,
+    b_final, labels — or their storage-form ``{"q", "scale"}`` pytrees)
+    on axis 0. Works on host (numpy) and device arrays alike."""
+    import jax
+
+    out = {}
+    for k, v in cached.items():
+        if k == "taps":
+            out[k] = jax.tree.map(lambda t: t[:, lo:hi], v)
+        else:
+            out[k] = jax.tree.map(lambda t: t[lo:hi], v)
+    return out
+
+
+def _chunk_parts(backbone, adapter, chunk, *, cfg, r, kernel_impl, interpret):
+    """(num, den, ∇num) for one chunk — the jitted per-device unit."""
+    import jax
+
+    from repro.core.steps import _cached_positions
+    from repro.kernels.cached_step import cached_loss_parts
+
+    positions = _cached_positions(chunk, cfg)
+
+    def parts(ap):
+        num, den = cached_loss_parts(
+            backbone, ap, cfg, chunk, positions, r,
+            impl=kernel_impl, interpret=interpret,
+        )
+        return num, den
+
+    (num, den), grad_num = jax.value_and_grad(parts, has_aux=True)(adapter)
+    return num, den, grad_num
+
+
+def _apply_update(adapter, opt_state, num, den, grad_sum, *, lr, clip):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.optim import adamw_update, clip_by_global_norm
+
+    den = jnp.maximum(den, 1)
+    loss = num / den
+    grads = jax.tree.map(lambda g: g / den, grad_sum)
+    grads, _ = clip_by_global_norm(grads, clip)
+    adapter, opt_state = adamw_update(adapter, grads, opt_state, lr=lr)
+    return loss, adapter, opt_state
+
+
+class ElasticDpRunner:
+    """Layout-independent cached steps for one job over a member subset.
+
+    ``placement`` at each step is ``[(member, device_or_None, share),
+    ...]`` — shares must sum to the batch's chunk count. ``device=None``
+    runs the member's chunks on the default device (single-process
+    tests/demos); numerics are identical either way.
+    """
+
+    def __init__(self, backbone, cfg, *, r: int = 8, lr=3e-3, clip=1.0,
+                 kernel_impl: str = "ref", interpret=None, chunk: int = 1):
+        import jax
+
+        if chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {chunk}")
+        self.backbone = backbone
+        self.cfg = cfg
+        self.chunk = chunk
+        self._chunk_fn = jax.jit(functools.partial(
+            _chunk_parts, cfg=cfg, r=r, kernel_impl=kernel_impl,
+            interpret=interpret))
+        self._update_fn = jax.jit(functools.partial(
+            _apply_update, lr=lr, clip=clip))
+        self._replicas: Dict[str, object] = {}   # member -> backbone on its device
+        self.n_reshards = 0
+
+    # -- membership ---------------------------------------------------------
+
+    def reshard(self, members: Sequence[Tuple[str, object]]) -> None:
+        """Adopt a new member set: drop replicas of departed members,
+        ship the backbone to joiners' devices (weights only — the cache
+        already holds every activation, so growth does zero backbone
+        forwards). Call between steps; the jitted chunk fn is reused."""
+        import jax
+
+        names = {n for n, _ in members}
+        for n in list(self._replicas):
+            if n not in names:
+                del self._replicas[n]
+        for n, dev in members:
+            if dev is not None and n not in self._replicas:
+                self._replicas[n] = jax.device_put(self.backbone, dev)
+        self.n_reshards += 1
+
+    def members(self) -> List[str]:
+        return list(self._replicas)
+
+    # -- the step -----------------------------------------------------------
+
+    def n_chunks(self, batch_size: int) -> int:
+        if batch_size % self.chunk:
+            raise ValueError(
+                f"batch {batch_size} not divisible into chunks of {self.chunk}")
+        return batch_size // self.chunk
+
+    def step(self, adapter, opt_state, cached: dict,
+             placement: Sequence[Tuple[str, object, int]]):
+        """One elastic cached step. Returns ``(loss, adapter, opt_state)``
+        — bit-identical for any placement of the same batch."""
+        import jax
+        import jax.numpy as jnp
+
+        n_chunks = self.n_chunks(cached["labels"].shape[0])
+        shares = [int(s) for _, _, s in placement]
+        if sum(shares) != n_chunks:
+            raise ValueError(
+                f"placement shares {shares} must cover {n_chunks} chunks")
+        owners: List[Tuple[str, object]] = []
+        for (name, dev, _), s in zip(placement, shares):
+            owners.extend([(name, dev)] * s)
+
+        # one adapter transfer per member device (it changed last step)
+        local_adapter: Dict[str, object] = {}
+        for name, dev, s in placement:
+            if s and dev is not None:
+                local_adapter[name] = jax.device_put(adapter, dev)
+
+        num = np.float32(0.0)
+        den = np.float32(0.0)
+        grad_sum = None
+        for ci in range(n_chunks):
+            name, dev = owners[ci]
+            piece = slice_cached(cached, ci * self.chunk, (ci + 1) * self.chunk)
+            if dev is not None:
+                piece = jax.device_put(piece, dev)
+            bb = self._replicas.get(name, self.backbone)
+            ap = local_adapter.get(name, adapter)
+            # canonical-order host accumulation: the float sums associate
+            # by chunk index, never by device layout — resharding cannot
+            # perturb them
+            n_i, d_i, g_i = jax.device_get(self._chunk_fn(bb, ap, piece))
+            num = np.float32(num + n_i)
+            den = np.float32(den + d_i)
+            if grad_sum is None:
+                grad_sum = g_i
+            else:
+                grad_sum = jax.tree.map(lambda a, b: np.add(a, b), grad_sum, g_i)
+
+        loss, adapter, opt_state = self._update_fn(
+            adapter, opt_state, jnp.asarray(num), jnp.asarray(den),
+            jax.tree.map(jnp.asarray, grad_sum))
+        return float(loss), adapter, opt_state

@@ -474,6 +474,76 @@ class EdgeSession:
             return f"{kind} dp{self.exec_dp}xpp{self.exec_stages}"
         return "full"
 
+    # -- fleet seams: preemption snapshots + elastic resharding ---------------
+
+    def snapshot(self, extra: dict = None) -> dict:
+        """The job's preemptible state: adapter + optimizer (the backbone
+        is frozen and the activation cache is reproducible/persistent, so
+        neither belongs in a snapshot). ``extra`` lets a caller ride its
+        own cursor (epoch/step index) along. The tree round-trips through
+        :func:`repro.checkpoint.save_checkpoint` bit-exactly — the
+        preempt-then-resume test pins that."""
+        if not self._opened:
+            raise RuntimeError("snapshot() needs an open()ed session")
+        snap = {"adapter": self.adapter, "opt": self.opt,
+                "config": self.cfg.name}
+        if extra:
+            snap["extra"] = dict(extra)
+        return snap
+
+    def restore(self, snap: dict) -> dict:
+        """Adopt a :meth:`snapshot`. Returns the snapshot's ``extra``."""
+        if not self._opened:
+            raise RuntimeError("restore() needs an open()ed session")
+        if snap.get("config") != self.cfg.name:
+            raise RunSpecError(
+                f"snapshot is for arch {snap.get('config')!r}, "
+                f"session runs {self.cfg.name!r}")
+        self.adapter = snap["adapter"]
+        self.opt = snap["opt"]
+        return snap.get("extra", {})
+
+    def save_snapshot(self, path: str, extra: dict = None) -> str:
+        """Checkpointed preemption: :meth:`snapshot` to disk (msgpack,
+        atomic) so a preempted job survives its process."""
+        from repro.checkpoint import save_checkpoint
+
+        save_checkpoint(path, self.snapshot(extra))
+        return path
+
+    def restore_snapshot(self, path: str) -> dict:
+        from repro.checkpoint import load_checkpoint
+
+        return self.restore(load_checkpoint(path))
+
+    def reshard(self, dp: int, devices=None) -> None:
+        """Elastic DP for a *distributed* session's cached epochs: rebuild
+        the (dp, stage) mesh at a new replica width over ``devices``
+        (default: the session's current device pool) and drop the
+        lazily-compiled cached step so the next cached batch recompiles
+        against the new layout. Legal between steps of a cached epoch —
+        pure-DP state is just (adapter, opt), both device-agnostic.
+        Single-device fleet jobs reshard through
+        :class:`repro.fleet.ElasticDpRunner` instead (chunk-level,
+        bit-identical numerics); this seam serves mesh-resident runs,
+        where shard_map reduction order may shift float sums at the last
+        bit. The epoch-1 step keeps the old mesh — reshard only once the
+        cache covers the epoch."""
+        if not self._opened:
+            raise RuntimeError("reshard() needs an open()ed session")
+        if not self.distributed:
+            raise RunSpecError(
+                "reshard() applies to multi-device sessions; single-device "
+                "jobs reshard via repro.fleet.ElasticDpRunner")
+        from repro.launch.mesh import make_edge_mesh
+
+        dp = int(dp)
+        if dp < 1:
+            raise RunSpecError(f"dp must be >= 1, got {dp}")
+        self.mesh = make_edge_mesh(dp, self.exec_stages, devices)
+        self.exec_dp = dp
+        self._stepN = None   # rebuilt for the new mesh on the next hit
+
     # -- outputs --------------------------------------------------------------
 
     def finish(self) -> None:

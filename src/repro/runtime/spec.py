@@ -164,6 +164,12 @@ class RunSpec:
                     f"for uneven boundaries)")
         return self
 
+    def replace(self, **changes) -> "RunSpec":
+        """A modified copy, re-validated — how the fleet CLI stamps
+        per-job seeds, cache dirs, and checkpoint paths onto one base
+        spec (``RunSpec`` is frozen)."""
+        return dataclasses.replace(self, **changes).validate()
+
     # -- (de)serialisation --------------------------------------------------
 
     def to_dict(self) -> dict:

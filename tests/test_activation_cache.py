@@ -589,3 +589,51 @@ def test_cache_bytes_per_sequence_with_final():
         cfg, 30, policy_bytes_per_value("int8"), with_final=True
     )
     assert v2 == int((cfg.n_periods + 2) * 30 * cfg.d_model * policy_bytes_per_value("int8"))
+
+
+# ---------------------------------------------------------------------------
+# prefetcher hardening for elastic resharding (repro.fleet)
+# ---------------------------------------------------------------------------
+
+
+def test_prefetcher_next_after_close_raises():
+    """A stale iterator after close() must fail loudly — before the
+    `_closed` flag a next() here blocked forever on the drained queue
+    (the fleet reshard path closes mid-epoch)."""
+    cache = _filled_cache(4)
+    order = [np.array([k]) for k in range(4)]
+    pf = CachePrefetcher(cache, order, to_device=False)
+    assert next(pf) is not None
+    pf.close()
+    with pytest.raises(RuntimeError, match="after close"):
+        next(pf)
+
+
+def test_prefetcher_reshard_close_reopen_mid_epoch():
+    """The elastic-reshard lifecycle: consume part of an epoch, close,
+    re-open a fresh prefetcher over the remaining order. No deadlock, no
+    leaked worker thread, and the stitched stream equals direct reads."""
+    import threading
+
+    def workers():
+        return [t for t in threading.enumerate()
+                if t.name == "activation-cache-prefetch" and t.is_alive()]
+
+    cache = _filled_cache(8)
+    order = [np.array([k, k + 1]) for k in range(0, 8, 2)]
+    base = len(workers())
+
+    pf = CachePrefetcher(cache, order, to_device=False, depth=1)
+    got = [next(pf), next(pf)]
+    pf.close()                                   # reshard point, mid-epoch
+    assert len(workers()) == base                # worker joined, not leaked
+
+    pf2 = CachePrefetcher(cache, order[2:], to_device=False, depth=1)
+    got.extend(pf2)
+    assert len(workers()) == base
+
+    want = [cache.get_batch(keys, with_final=True) for keys in order]
+    assert len(got) == len(want)
+    for w, g in zip(want, got):
+        for a, b in zip(w, g):
+            np.testing.assert_array_equal(a, b)

@@ -65,3 +65,47 @@ def test_cache_policy_change_invalidates(tmp_path):
     out = _run(cache_dir, epochs=1, compress="bf16")
     assert "ACTIVATION CACHE INVALIDATED" in out.stderr
     assert "compression policy changed" in out.stderr
+
+
+def test_crash_mid_epoch_restarts_warm_with_identical_losses(tmp_path):
+    """Crash recovery: a warm run hard-killed mid-epoch (os._exit, no
+    cleanup) must leave the cache dir intact — the restart is still
+    warm, performs zero backbone forwards, and reports losses identical
+    to an uninterrupted run."""
+    import re
+
+    cache_dir = tmp_path / "act_cache"
+    _run(cache_dir)                                  # cold capture
+    ref = _run(cache_dir)                            # uninterrupted warm run
+
+    # a warm run killed one step into epoch 0 — process dies with the
+    # prefetcher thread live and no close()/finish()
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    crash = subprocess.run(
+        [sys.executable, "-c", f"""
+import os
+from repro.runtime import RunSpec, EdgeSession
+
+spec = RunSpec(reduced=True, epochs=2, steps_per_epoch=2, batch=2, seq=16,
+               cache_dir={str(cache_dir)!r}, cache_compress="int8")
+s = EdgeSession(spec).open()
+assert s.warm
+batch = next(iter(s.pipe.epoch(0)))
+event = s.step(batch, epoch=0, index=0)
+assert event.cache_hit
+os._exit(17)                   # simulated mid-epoch process kill
+"""],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert crash.returncode == 17, crash.stderr[-3000:]
+
+    after = _run(cache_dir)                          # restart after the crash
+    assert "warm manifest" in after.stdout
+    assert "(full)" not in after.stdout              # zero backbone forwards
+    assert after.stdout.count("(cached)") == 2
+
+    def losses(out):
+        return re.findall(r"epoch \d+: loss=([\d.]+)", out.stdout)
+
+    assert losses(after) == losses(ref) and losses(ref)

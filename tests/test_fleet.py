@@ -1,0 +1,609 @@
+"""Fleet scheduler tests: deterministic failure simulation.
+
+The load-bearing assertions are **exact float equality**: killing a
+device mid-cached-epoch, deweighting a straggler, or preempting and
+resuming a job must not move a single bit of any loss or of the final
+adapter — the elastic runner's canonical-order chunk accumulation makes
+the numerics placement-independent by construction, and these tests pin
+that contract.
+
+Scheduler-invariant property tests drive a no-JAX stub job over seeded
+random :class:`FaultPlan` scripts (``tests/_propcheck``): no device is
+ever double-booked, chunk shares always cover the batch, and every
+admitted job eventually completes once capacity exists.
+
+Heavier bound-device subprocess simulations are marked ``slow_sim``
+(excluded from tier-1 by the pyproject addopts; CI's fleet job runs
+them on 8 fake host devices).
+"""
+
+import os
+import subprocess
+import sys
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+from _propcheck import given, settings, strategies as st
+
+from repro.checkpoint import tree_fingerprint
+from repro.core.planner import (
+    HybridParallelismPlanner,
+    JETSON_NANO_H,
+    JETSON_NANO_L,
+    model_layer_costs,
+)
+from repro.configs import get_arch
+from repro.fleet import (
+    DeviceMember,
+    DevicePool,
+    FaultPlan,
+    FleetEvent,
+    FleetScheduler,
+    ScriptedEvents,
+    SessionJob,
+    SimClock,
+    assign_chunks,
+    slice_cached,
+)
+from repro.runtime import RunSpec, RunSpecError
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+SPEC = RunSpec(arch="internlm2-1.8b", reduced=True, epochs=3,
+               steps_per_epoch=2, batch=4, seq=16, r=4, lr=1e-2)
+
+
+def _pool(n=3, timeout=1.5):
+    return DevicePool([DeviceMember(f"dev{i}") for i in range(n)],
+                      clock=SimClock(), heartbeat_timeout=timeout)
+
+
+def _run(events=None, jobs=None, pool=None, **kw):
+    sched = FleetScheduler(pool if pool is not None else _pool(),
+                           events=events, **kw)
+    jobs = jobs if jobs is not None else [SessionJob("alice", SPEC)]
+    for j in jobs:
+        sched.submit(j)
+    report = sched.run()
+    return sched, report, jobs
+
+
+@pytest.fixture(scope="module")
+def baseline():
+    """The fault-free reference run every fault scenario must match
+    float-for-float."""
+    _, report, (job,) = _run()
+    return SimpleNamespace(
+        losses=report.losses("alice"),
+        fingerprint=tree_fingerprint(job.session.adapter),
+        job=job,
+    )
+
+
+# ---------------------------------------------------------------------------
+# clock / events / pool units
+# ---------------------------------------------------------------------------
+
+
+def test_sim_clock():
+    c = SimClock(start=2.0)
+    assert c.now() == 2.0
+    assert c.advance(1.5) == 3.5
+    with pytest.raises(ValueError):
+        c.advance(-1.0)
+
+
+def test_fault_plan_validation_and_roundtrip(tmp_path):
+    with pytest.raises(ValueError):
+        FleetEvent(0, "explode", device="d0")
+    with pytest.raises(ValueError):
+        FleetEvent(0, "submit")           # needs job=
+    with pytest.raises(ValueError):
+        FleetEvent(0, "kill")             # needs device=
+    with pytest.raises(ValueError):
+        FleetEvent(0, "slow", device="d0", factor=0.0)
+
+    plan = FaultPlan([
+        FleetEvent(5, "kill", device="d1"),
+        FleetEvent(2, "submit", job="j0"),
+        FleetEvent(5, "join", device="d9"),
+    ])
+    # sorted by (tick, kind order): join precedes kill at the same tick
+    assert [e.kind for e in plan.events] == ["submit", "join", "kill"]
+    assert plan.last_tick == 5
+    assert [e.kind for e in plan.at(5)] == ["join", "kill"]
+
+    path = tmp_path / "faults.json"
+    plan.save(str(path))
+    assert FaultPlan.load(str(path)).events == plan.events
+
+
+def test_fault_plan_random_is_seed_deterministic():
+    a = FaultPlan.random(7, ["d0", "d1"], jobs=["j0"])
+    b = FaultPlan.random(7, ["d0", "d1"], jobs=["j0"])
+    c = FaultPlan.random(8, ["d0", "d1"], jobs=["j0"])
+    assert a.events == b.events
+    assert a.events != c.events
+
+
+def test_scripted_events_deliver_each_tick_once():
+    ev = ScriptedEvents(FaultPlan([FleetEvent(1, "kill", device="d0")]))
+    assert not ev.exhausted
+    assert ev.poll(0) == []
+    assert len(ev.poll(1)) == 1
+    assert ev.poll(1) == []
+    assert ev.exhausted
+
+
+def test_pool_kill_detected_after_timeout():
+    clock = SimClock()
+    pool = DevicePool([DeviceMember("a"), DeviceMember("b")],
+                      clock=clock, heartbeat_timeout=1.5)
+    pool.kill("a")
+    for tick in range(4):
+        pool.heartbeat_all()          # killed member stops reporting
+        lost = pool.check_timeouts()
+        if lost:
+            assert lost == ["a"]
+            assert tick == 2          # deterministic: first tick with age > 1.5
+            break
+        clock.advance(1.0)
+    else:
+        pytest.fail("kill never detected")
+    assert pool.alive() == ["b"]
+
+
+def test_pool_slots_recycle_and_speed_scaling():
+    pool = DevicePool([DeviceMember("a"), DeviceMember("b")],
+                      bind_devices=True, capacity=2)
+    assert [pool.member(n).slot for n in ("a", "b")] == [0, 1]
+    with pytest.raises(ValueError):
+        pool.add(DeviceMember("c"))   # at capacity
+    gen = pool.generation
+    pool.remove(("a"))
+    pool.add(DeviceMember("c"))
+    assert pool.member("c").slot == 0            # recycled
+    assert pool.generation == gen + 2
+    pool.mark_slow("c", 0.5)
+    assert pool.member("c").effective_profile().flops == pytest.approx(
+        0.5 * pool.member("b").effective_profile().flops)
+    assert pool.profiles(["b"])[0] == pool.member("b").profile
+
+
+# ---------------------------------------------------------------------------
+# elastic primitives
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(n_chunks=st.integers(0, 32), n_members=st.integers(1, 6),
+       seed=st.integers(0, 99))
+def test_assign_chunks_covers_and_is_deterministic(n_chunks, n_members, seed):
+    rng = np.random.RandomState(seed)
+    weights = rng.uniform(0.1, 4.0, n_members).tolist()
+    counts = assign_chunks(n_chunks, n_members, weights)
+    assert sum(counts) == n_chunks
+    assert all(c >= 0 for c in counts)
+    assert counts == assign_chunks(n_chunks, n_members, weights)
+    if n_chunks >= n_members:
+        # a >2x faster member never gets fewer chunks
+        for i in range(n_members):
+            for j in range(n_members):
+                if weights[i] > 2.0 * weights[j]:
+                    assert counts[i] >= counts[j]
+
+
+def test_slice_cached_axes_and_storage_form():
+    cached = {
+        "b0": np.arange(24, dtype=np.float32).reshape(4, 3, 2),
+        "taps": {"q": np.zeros((2, 4, 3, 2), np.int8),
+                 "scale": np.ones((2, 4, 3), np.float32)},
+        "b_final": np.zeros((4, 3, 2), np.float32),
+        "labels": np.arange(12, dtype=np.int32).reshape(4, 3),
+    }
+    piece = slice_cached(cached, 1, 3)
+    assert piece["b0"].shape == (2, 3, 2)
+    np.testing.assert_array_equal(piece["b0"], cached["b0"][1:3])
+    # taps (incl. {"q","scale"} leaves) slice on axis 1, not axis 0
+    assert piece["taps"]["q"].shape == (2, 2, 3, 2)
+    assert piece["taps"]["scale"].shape == (2, 2, 3)
+    assert piece["labels"].shape == (2, 3)
+
+
+def test_elastic_step_is_placement_invariant(baseline):
+    """The core numerical contract, unit level: the same cached batch
+    stepped under 1-, 2-, and 3-member placements produces bit-identical
+    loss/adapter/optimizer."""
+    job = baseline.job
+    s = job.session
+    ids = s.pipe.epoch_order(1)[0]
+    hit = s.cache.get_batch(ids, with_final=True, dtype=None)
+    assert hit is not None
+    b0, taps, bf = hit
+    cached = {"b0": b0, "taps": taps, "b_final": bf,
+              "labels": s.corpus.batch(ids)["labels"]}
+    runner = job._elastic
+    outs = []
+    for placement in (
+        [("a", None, 4)],
+        [("a", None, 3), ("b", None, 1)],
+        [("a", None, 1), ("b", None, 1), ("c", None, 2)],
+    ):
+        loss, adapter, opt = runner.step(s.adapter, s.opt, cached, placement)
+        outs.append((loss, tree_fingerprint(adapter), tree_fingerprint(opt)))
+    assert outs[0] == outs[1] == outs[2]
+    with pytest.raises(ValueError):
+        runner.step(s.adapter, s.opt, cached, [("a", None, 3)])  # shares != 4
+
+
+# ---------------------------------------------------------------------------
+# planner: incremental subset re-plan
+# ---------------------------------------------------------------------------
+
+
+def test_planner_available_subset_matches_fresh_planner():
+    costs = model_layer_costs(get_arch("t5-base-pac"), "pac", seq_len=64)
+    devices = [JETSON_NANO_H, JETSON_NANO_L, JETSON_NANO_H, JETSON_NANO_L]
+    planner = HybridParallelismPlanner(costs, devices, 4, 4)
+    full = planner.plan()
+    h_entries = len(planner._h_cache)
+
+    # device 1 "died": re-plan the survivors in place
+    sub = planner.plan(available=[0, 2, 3])
+    fresh = HybridParallelismPlanner(
+        costs, [devices[0], devices[2], devices[3]], 4, 4).plan()
+    assert sub.minibatch_latency == pytest.approx(fresh.minibatch_latency)
+    assert sub.n_stages == fresh.n_stages
+    assert [st_.samples_per_device for st_ in sub.stages] == \
+        [st_.samples_per_device for st_ in fresh.stages]
+    # Eq. (4) memo carried over — the subset re-plan reused prior groups
+    assert len(planner._h_cache) >= h_entries
+    # and the full-pool plan is reproducible afterwards (avail resets)
+    again = planner.plan()
+    assert again.minibatch_latency == pytest.approx(full.minibatch_latency)
+
+    with pytest.raises(ValueError):
+        planner.plan(available=[0, 0])
+    with pytest.raises(ValueError):
+        planner.plan(available=[99])
+    with pytest.raises(ValueError):
+        planner.plan(available=[])
+
+
+# ---------------------------------------------------------------------------
+# the acceptance scenarios (in-process, logical members)
+# ---------------------------------------------------------------------------
+
+
+def test_kill_mid_cached_epoch_matches_fault_free_exactly(baseline):
+    """A device killed mid-cached-epoch: detection after the heartbeat
+    timeout, elastic reshard onto the survivors, zero extra backbone
+    forwards — and every loss equal to the fault-free run's, exactly."""
+    events = ScriptedEvents(FaultPlan([FleetEvent(3, "kill", device="dev1")]))
+    _, report, (job,) = _run(events=events)
+    assert report.losses("alice") == baseline.losses          # exact floats
+    assert tree_fingerprint(job.session.adapter) == baseline.fingerprint
+    assert job.state == "done"
+    assert job.forward_steps == SPEC.steps_per_epoch          # epoch 1 only
+    assert job.reshards >= 1                                  # it DID reshard
+    assert any("dev1" in rec.lost for rec in report.ticks)    # it WAS detected
+    # post-detection placements exclude the dead device
+    lost_at = next(r.tick for r in report.ticks if "dev1" in r.lost)
+    for rec in report.ticks:
+        if rec.tick >= lost_at:
+            assert all("dev1" not in d for d in rec.placements.values())
+
+
+def test_straggler_deweighted_by_replan_losses_unchanged(baseline):
+    """A 4x-slower member keeps its membership but the Eq. (4) re-plan
+    moves chunks off it — with zero numerical effect."""
+    events = ScriptedEvents(FaultPlan(
+        [FleetEvent(3, "slow", device="dev0", factor=0.25)]))
+    _, report, (job,) = _run(events=events)
+    assert report.losses("alice") == baseline.losses          # exact floats
+    assert tree_fingerprint(job.session.adapter) == baseline.fingerprint
+
+    def dev0_share(rec):
+        pl, sh = rec.placements["alice"], rec.shares["alice"]
+        return dict(zip(pl, sh)).get("dev0", 0)
+
+    before = [dev0_share(r) for r in report.ticks if r.tick < 3 and "alice" in r.shares]
+    after = [dev0_share(r) for r in report.ticks if r.tick > 3 and "alice" in r.shares]
+    assert after and max(after) < min(before)   # deweighted, still a member
+    assert all("dev0" in r.placements["alice"] for r in report.ticks
+               if "alice" in r.placements)
+
+
+def test_preempt_resume_is_bit_identical(baseline, tmp_path):
+    """Quantum preemption through the on-disk snapshot path: job A is
+    paused for job B and resumed; A's losses and final adapter are
+    bit-identical to an uninterrupted run."""
+    pool = _pool(1)
+    sched = FleetScheduler(pool, quantum=2, snapshot_dir=str(tmp_path))
+    alice = SessionJob("alice", SPEC)
+    bob = SessionJob("bob", SPEC.replace(seed=1))
+    sched.submit(alice)
+    sched.submit(bob)
+    report = sched.run()
+    preempted = [n for rec in report.ticks for n in rec.preempted]
+    assert "alice" in preempted                  # it really was interrupted
+    assert "alice.ckpt" in os.listdir(str(tmp_path))   # it went through disk
+    assert alice.state == "done" and bob.state == "done"
+    assert report.losses("alice") == baseline.losses
+    assert tree_fingerprint(alice.session.adapter) == baseline.fingerprint
+    # bob trained a different corpus — sanity that the jobs were distinct
+    assert report.losses("bob") != baseline.losses
+
+
+def test_rejection_when_pool_can_never_fit():
+    pool = DevicePool([DeviceMember("a")], clock=SimClock(), capacity=1)
+    sched = FleetScheduler(pool)
+    job = SessionJob("alice", SPEC)
+    job.min_devices = 2                      # needs more than capacity
+    assert not sched.submit(job)
+    assert job.state == "rejected"
+    assert sched.report.rejected == ["alice"]
+    assert sched.quiescent
+
+
+# ---------------------------------------------------------------------------
+# scheduler invariants (no-JAX stub jobs + random fault scripts)
+# ---------------------------------------------------------------------------
+
+
+class StubJob:
+    """Duck-typed SessionJob: scheduler logic without any JAX."""
+
+    min_devices = 1
+
+    def __init__(self, name, steps=6, n_chunks=4):
+        self.name = name
+        self.n_chunks = n_chunks
+        self.max_devices = n_chunks
+        self.state = "queued"
+        self.steps_left = steps
+        self.forward_steps = self.cached_steps = self.reshards = 0
+
+    @property
+    def done(self):
+        return self.steps_left <= 0
+
+    def plan_shares(self, profiles):
+        return None                     # scheduler falls back to assign_chunks
+
+    def run_step(self, placement):
+        assert placement, "stepped with no devices"
+        assert sum(s for _, _, s in placement) == self.n_chunks
+        self.steps_left -= 1
+        if self.done:
+            self.state = "done"
+        return SimpleNamespace(loss=float(self.steps_left))
+
+    def pause(self, snapshot_dir=None):
+        self.state = "preempted"
+        return {"steps_left": self.steps_left}
+
+    def resume(self, snap):
+        assert snap["steps_left"] == self.steps_left   # nothing lost in between
+        self.state = "queued"
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), quantum=st.sampled_from([None, 2, 3]))
+def test_scheduler_invariants_under_random_fault_plans(seed, quantum):
+    devices = [f"d{i}" for i in range(6)]
+    plan = FaultPlan.random(seed, devices, n_events=10, max_tick=12,
+                            jobs=["j0", "j1", "j2"])
+    pool = DevicePool([DeviceMember(d) for d in devices[:3]],
+                      clock=SimClock(), heartbeat_timeout=1.5)
+    sched = FleetScheduler(pool, events=ScriptedEvents(plan), quantum=quantum)
+    jobs = [StubJob(f"j{i}") for i in range(3)]
+    for j in jobs:
+        sched.register(j)
+    sched.run(max_ticks=60)
+
+    submitted = [j for j in jobs
+                 if any(e.kind == "submit" and e.job == j.name
+                        for e in plan.events)]
+    for rec in sched.report.ticks:
+        placed = [d for devs in rec.placements.values() for d in devs]
+        assert len(placed) == len(set(placed)), \
+            f"device double-booked at tick {rec.tick}: {rec.placements}"
+        # shares cover each stepping job's chunks (asserted inside StubJob
+        # too); a job never steps while queued
+        assert not (set(rec.steps) & set(rec.queued))
+
+    # liveness: once capacity exists and the script is over, every
+    # submitted job runs to completion (placed-or-rejected, eventually)
+    if any(not j.done for j in submitted):
+        if len(pool) == 0:
+            pool.add(DeviceMember("rescue"))
+        sched.run(max_ticks=60)
+    for j in submitted:
+        assert j.done or j.state == "rejected", \
+            f"{j.name} starved: state={j.state} steps_left={j.steps_left}"
+
+
+def test_multi_job_fairness_no_starvation():
+    """Three stub jobs on two devices, FIFO + quantum: all make progress
+    interleaved — no job waits for another to fully finish."""
+    pool = DevicePool([DeviceMember("a"), DeviceMember("b")], clock=SimClock())
+    sched = FleetScheduler(pool, quantum=2)
+    jobs = [StubJob(f"j{i}", steps=6) for i in range(3)]
+    for j in jobs:
+        sched.submit(j)
+    report = sched.run(max_ticks=60)
+    assert all(j.done for j in jobs)
+    first = [report.first_step_tick(j.name) for j in jobs]
+    assert None not in first
+    # nobody's first step waits for another job's completion (6 steps)
+    assert max(first) < 6
+    # preemption actually rotated the pool
+    assert any(rec.preempted for rec in report.ticks)
+
+
+def test_pool_slot_conservation_under_random_plans():
+    """The device-slot allocator across arbitrary join/leave/kill
+    sequences: live slots are unique, recycled, and bounded."""
+    for seed in range(25):
+        plan = FaultPlan.random(seed, [f"d{i}" for i in range(6)],
+                                n_events=12, max_tick=10)
+        pool = DevicePool([DeviceMember("d0"), DeviceMember("d1")],
+                          bind_devices=True, clock=SimClock(),
+                          heartbeat_timeout=1.5)
+        for tick in range(12):
+            for e in plan.at(tick):
+                if e.kind == "join" and e.device not in pool:
+                    pool.add(DeviceMember(e.device))
+                elif e.kind == "leave" and e.device in pool:
+                    pool.remove(e.device)
+                elif e.kind == "kill" and e.device in pool:
+                    pool.kill(e.device)
+                elif e.kind == "slow" and e.device in pool:
+                    pool.mark_slow(e.device, e.factor)
+            pool.heartbeat_all()
+            pool.check_timeouts()
+            pool.clock.advance(1.0)
+            slots = [pool.member(n).slot for n in pool.alive()]
+            assert len(slots) == len(set(slots)), f"slot reuse: {slots}"
+            assert pool._next_slot <= 6 + 2  # recycling bounds growth
+            assert not (set(pool._free_slots) & set(slots))
+
+
+# ---------------------------------------------------------------------------
+# session seams
+# ---------------------------------------------------------------------------
+
+
+def test_session_snapshot_restore_roundtrip(baseline, tmp_path):
+    s = baseline.job.session
+    snap = s.snapshot(extra={"epoch": 2, "index": 1})
+    path = s.save_snapshot(str(tmp_path / "snap.ckpt"),
+                           extra={"epoch": 2, "index": 1})
+    fp = tree_fingerprint(s.adapter)
+    extra = s.restore_snapshot(path)
+    assert extra == {"epoch": 2, "index": 1}
+    assert tree_fingerprint(s.adapter) == fp          # disk round-trip exact
+    assert s.restore(snap) == {"epoch": 2, "index": 1}
+    with pytest.raises(RunSpecError):
+        s.restore({"adapter": s.adapter, "opt": s.opt, "config": "other-arch"})
+    with pytest.raises(RunSpecError):
+        s.reshard(2)      # single-device sessions reshard via the fleet
+
+
+def test_run_spec_replace_validates():
+    assert SPEC.replace(seed=5).seed == 5
+    assert SPEC.replace(seed=5) != SPEC
+    with pytest.raises(RunSpecError):
+        SPEC.replace(batch=0)
+
+
+def test_session_job_rejects_distributed_specs():
+    with pytest.raises(RunSpecError):
+        SessionJob("x", SPEC.replace(dp=2, stages=2, batch=4, seq=16))
+    with pytest.raises(RunSpecError):
+        SessionJob("x", SPEC, chunk=3)    # 4 % 3 != 0
+
+
+# ---------------------------------------------------------------------------
+# bound-device simulations (CI fleet job; excluded from tier-1)
+# ---------------------------------------------------------------------------
+
+
+def _run_sub(code):
+    env = dict(os.environ, PYTHONPATH=SRC, JAX_PLATFORMS="cpu")
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, timeout=600, env=env)
+
+
+@pytest.mark.slow_sim
+def test_kill_simulation_on_bound_fake_devices():
+    """The full acceptance scenario with members bound to distinct fake
+    host devices: kill one mid-cached-epoch; the faulted run's losses
+    and final adapter must equal the fault-free run's exactly."""
+    r = _run_sub("""
+from repro import compat
+compat.force_host_device_count(4)
+from repro.checkpoint import tree_fingerprint
+from repro.fleet import (DeviceMember, DevicePool, FaultPlan, FleetEvent,
+                         FleetScheduler, ScriptedEvents, SessionJob, SimClock)
+from repro.runtime import RunSpec
+
+spec = RunSpec(arch="internlm2-1.8b", reduced=True, epochs=3,
+               steps_per_epoch=2, batch=4, seq=16, r=4, lr=1e-2)
+
+def run(events):
+    pool = DevicePool([DeviceMember(f"dev{i}") for i in range(4)],
+                      clock=SimClock(), heartbeat_timeout=1.5,
+                      bind_devices=True)
+    sched = FleetScheduler(pool, events=events)
+    job = SessionJob("alice", spec)
+    sched.submit(job)
+    report = sched.run()
+    assert job.state == "done"
+    return report.losses("alice"), tree_fingerprint(job.session.adapter), job
+
+faulted = ScriptedEvents(FaultPlan([FleetEvent(3, "kill", device="dev2")]))
+l1, f1, j1 = run(faulted)
+l2, f2, j2 = run(None)
+assert j1.reshards >= 1 and j1.forward_steps == 2
+assert l1 == l2, f"losses diverged: {l1} vs {l2}"
+assert f1 == f2, "final adapters differ"
+print("BOUND-DEVICE-EXACT-OK")
+""")
+    assert r.returncode == 0, r.stderr[-4000:]
+    assert "BOUND-DEVICE-EXACT-OK" in r.stdout
+
+
+@pytest.mark.slow_sim
+def test_fleet_cli_smoke_two_jobs_one_kill(tmp_path):
+    plan = tmp_path / "faults.json"
+    r = _run_sub(f"""
+import sys
+sys.argv = ["fleet", "--simulate", "--reduced", "--pool", "3", "--jobs", "2",
+            "--epochs", "2", "--steps-per-epoch", "2", "--batch", "2",
+            "--seq", "16", "--r", "4", "--kill-tick", "3",
+            "--save-fault-plan", {str(plan)!r}]
+from repro.launch.fleet import main
+main()
+""")
+    assert r.returncode == 0, r.stderr[-4000:]
+    assert "job0: done" in r.stdout and "job1: done" in r.stdout
+    assert plan.exists()
+
+
+@pytest.mark.slow_sim
+def test_distributed_session_reshard_dp2_to_dp1():
+    """The EdgeSession.reshard seam on a real mesh: a dp=2 cached epoch
+    continues as dp=1 after shrinking — state carries over, losses stay
+    finite and close to the dp=2 continuation (shard_map reduction
+    order may differ at the last bit, hence allclose not equality)."""
+    r = _run_sub("""
+import numpy as np
+from repro.runtime import RunSpec, EdgeSession
+from repro.runtime.runner import EpochRunner
+
+spec = RunSpec(arch="internlm2-1.8b", reduced=True, epochs=3,
+               steps_per_epoch=2, batch=4, seq=16, r=4, dp=2, stages=2)
+
+def run(shrink):
+    s = EdgeSession(spec).open()
+    runner = EpochRunner(s)
+    reports = [list(runner.run_epoch(0))[-1], list(runner.run_epoch(1))[-1]]
+    if shrink:
+        s.reshard(1)
+        assert s.exec_dp == 1
+    reports.append(list(runner.run_epoch(2))[-1])
+    assert reports[1].used_cache and reports[2].used_cache
+    return [l for rep in reports for l in rep.losses]
+
+a = run(shrink=True)
+b = run(shrink=False)
+assert all(np.isfinite(a))
+assert np.allclose(a, b, rtol=1e-5), f"{a} vs {b}"
+print("RESHARD-DP-OK")
+""")
+    assert r.returncode == 0, r.stderr[-4000:]
+    assert "RESHARD-DP-OK" in r.stdout

@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _propcheck import given, settings, strategies as st
 
 from repro.serve import (
     OutOfPagesError,
@@ -181,3 +182,70 @@ def test_submit_validates_against_engine_limits(
         eng.submit(list(range(40)), "alice", max_new_tokens=1)  # > max_len
     with pytest.raises(KeyError):
         eng.submit([1, 2], "mallory", max_new_tokens=2)  # unknown adapter
+
+
+# ---------------------------------------------------------- paging properties
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_paging_random_op_sequences_conserve_pages(seed):
+    """Allocator/page-table invariants under random open/grow/close
+    traffic: pages are conserved (free + owned == n_pages - 1), no page
+    is ever in two runs, the null page is never handed out, and the CSR
+    and dense exports always agree."""
+    import random as _random
+
+    rng = _random.Random(seed)
+    n_pages, page, max_pages = 17, 4, 5
+    alloc = PageAllocator(n_pages)
+    table = PageTable(alloc, page=page, max_pages=max_pages)
+    live: list = []
+    next_rid = 0
+
+    for _ in range(60):
+        op = rng.choice(["open", "close", "append", "extend"])
+        try:
+            if op == "open":
+                table.open(next_rid, n_tokens=rng.randrange(0, page * max_pages + 1))
+                live.append(next_rid)
+                next_rid += 1
+            elif op == "close" and live:
+                table.close(live.pop(rng.randrange(len(live))))
+            elif op == "append" and live:
+                table.append_token(rng.choice(live))
+            elif op == "extend" and live:
+                rid = rng.choice(live)
+                table.extend_to(rid, rng.randrange(0, page * max_pages + 2))
+        except OutOfPagesError:
+            if op == "open" and next_rid in table._pages:
+                # failed admission leaves an empty, zero-length run —
+                # release it, as the engine's admission control does
+                assert table._pages[next_rid] == []
+                table.close(next_rid)
+
+        # conservation: every non-null page is free XOR owned by one run
+        owned = [p for rid in live for p in table._pages[rid]]
+        assert len(owned) == len(set(owned)), f"page double-owned: {owned}"
+        assert 0 not in owned
+        assert alloc.free_pages + len(owned) == n_pages - 1
+        # each run covers its token count, within max_pages
+        for rid in live:
+            run = table._pages[rid]
+            assert len(run) <= max_pages
+            assert len(run) * page >= table.length(rid)
+        # CSR vs dense agree for a random row order
+        rids = rng.sample(live, len(live))
+        indptr, flat = table.ragged(rids)
+        bt, lengths = table.dense(rids)
+        assert indptr[-1] == len(flat)
+        for i, rid in enumerate(rids):
+            run = flat[indptr[i]:indptr[i + 1]].tolist()
+            assert run == table._pages[rid]
+            assert bt[i, :len(run)].tolist() == run
+            assert not bt[i, len(run):].any()          # null-page padding
+            assert lengths[i] == table.length(rid)
+
+    for rid in list(live):
+        table.close(rid)
+    assert alloc.free_pages == n_pages - 1             # everything returned
